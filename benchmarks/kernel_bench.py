@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference oracles.
+
+On CPU the interpret-mode numbers are correctness/plumbing benchmarks, not
+TPU performance; the TPU-side expectation is derived analytically in
+EXPERIMENTS.md (VMEM-resident state removes the HBM round-trips that
+dominate the jnp paths).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+Row = tuple[str, float, str]
+
+
+def _timeit(fn, repeat=3) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def bench_flash_attention() -> list[Row]:
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    rows = []
+    B, H, Hkv, S, D = 1, 8, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    flops = 4 * B * H * S * S * D * 0.5
+    us = _timeit(lambda: jax.block_until_ready(
+        fa.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)), repeat=1)
+    rows.append(("flash_attn_pallas_interp_512", us, f"gflops={flops / (us / 1e6) / 1e9:.2f}"))
+    ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _timeit(lambda: jax.block_until_ready(ref(q, k, v)))
+    rows.append(("flash_attn_ref_jnp_512", us, f"gflops={flops / (us / 1e6) / 1e9:.2f}"))
+    return rows
+
+
+def bench_rsp_shuffle() -> list[Row]:
+    from repro.kernels.rsp_shuffle import ops as rs
+
+    rows = []
+    R, D, T = 65_536, 32, 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (R, D), jnp.float32)
+    tp, ip = rs.make_permutations(jax.random.PRNGKey(1), R // T, T)
+    gb = R * D * 4 / 1e9
+    us = _timeit(lambda: jax.block_until_ready(rs.rsp_shuffle(x, tp, ip, tile_rows=T)), repeat=1)
+    rows.append(("rsp_shuffle_pallas_interp_64k", us, f"gbps={gb / (us / 1e6):.3f}"))
+    gather = jax.jit(lambda x, idx: x[idx])
+    idx = jax.random.permutation(jax.random.PRNGKey(2), R)
+    us = _timeit(lambda: jax.block_until_ready(gather(x, idx)))
+    rows.append(("rsp_shuffle_xla_gather_64k", us, f"gbps={gb / (us / 1e6):.3f}"))
+    return rows
+
+
+def bench_ssd_and_wkv() -> list[Row]:
+    from repro.kernels.mamba2_ssd import ops as ssd_ops
+    from repro.models.mamba2 import ssd_chunked, ssd_reference
+    from repro.kernels.rwkv6_wkv import ops as wkv_ops
+    from repro.models.rwkv6 import wkv6_scan
+
+    rows = []
+    B, L, H, P, N = 1, 512, 8, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    xbar = jax.random.normal(ks[0], (B, L, H, P))
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, N))
+    Cm = jax.random.normal(ks[3], (B, L, N))
+    us = _timeit(lambda: jax.block_until_ready(ssd_ops.ssd(xbar, dA, Bm, Cm, chunk=128)), repeat=1)
+    rows.append(("mamba2_ssd_pallas_interp_L512", us, ""))
+    ref = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    us = _timeit(lambda: jax.block_until_ready(ref(xbar, dA, Bm, Cm)))
+    rows.append(("mamba2_ssd_jnp_chunked_L512", us, ""))
+    scan = jax.jit(ssd_reference)
+    us = _timeit(lambda: jax.block_until_ready(scan(xbar, dA, Bm, Cm)))
+    rows.append(("mamba2_ssd_jnp_scan_L512", us, ""))
+
+    C = 64
+    r = jax.random.normal(ks[0], (B, L, H, C))
+    k2 = jax.random.normal(ks[1], (B, L, H, C))
+    v2 = jax.random.normal(ks[2], (B, L, H, C))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, L, H, C)))
+    u = jnp.full((H, C), 0.3)
+    us = _timeit(lambda: jax.block_until_ready(wkv_ops.wkv6(r, k2, v2, w, u, chunk=16)), repeat=1)
+    rows.append(("rwkv6_wkv_pallas_interp_L512", us, ""))
+    scan2 = jax.jit(wkv6_scan)
+    us = _timeit(lambda: jax.block_until_ready(scan2(r, k2, v2, w, u)))
+    rows.append(("rwkv6_wkv_jnp_scan_L512", us, ""))
+    return rows
+
+
+ALL_KERNELS = [bench_flash_attention, bench_rsp_shuffle, bench_ssd_and_wkv]

@@ -1,0 +1,209 @@
+"""Benchmarks reproducing the paper's tables/figures on synthetic data.
+
+One function per figure; each returns rows of (name, us_per_call, derived)
+and the harness prints CSV.  Sizes are CPU-budgeted; the shapes of the
+curves (linear partition scaling, fast estimator convergence, ensemble
+plateau at a fraction of the data, block-batch time flatness) are the
+reproduction targets, matched against the paper's claims in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BlockLevelEstimator,
+    RSPSpec,
+    asymptotic_ensemble_learn,
+    make_logreg,
+    mmd_block_vs_data,
+    two_stage_partition_jax,
+    two_stage_partition_np,
+    train_base_models_vmapped,
+)
+from repro.core.similarity import ks_statistic, max_label_divergence
+from repro.data import make_higgs_like, make_nonrandom_higgs_like
+
+Row = tuple[str, float, str]
+
+
+def _timeit(fn, *args, repeat=3, **kw) -> float:
+    fn(*args, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# Fig 1: partitioning time vs number of records (linear scaling)
+# ---------------------------------------------------------------------------
+
+def fig1_partition_scaling() -> list[Row]:
+    rows: list[Row] = []
+    F = 28
+    times = {}
+    for n in (50_000, 100_000, 200_000, 400_000):
+        x, y = make_higgs_like(n, num_features=F, seed=0)
+        data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+        K = n // 10_000
+        spec = RSPSpec(num_records=n, num_blocks=K, num_original_blocks=K, seed=1)
+        us = _timeit(two_stage_partition_np, data, spec, repeat=2)
+        times[n] = us
+        rows.append((f"fig1_partition_np_n{n}", us, f"recs_per_s={n / (us / 1e6):.3e}"))
+        dj = jnp.asarray(data)
+        fn = lambda: two_stage_partition_jax(
+            dj, jax.random.PRNGKey(0), num_blocks=K, num_original_blocks=K
+        ).block_until_ready()
+        us_j = _timeit(fn, repeat=2)
+        rows.append((f"fig1_partition_jax_n{n}", us_j, f"recs_per_s={n / (us_j / 1e6):.3e}"))
+    # linearity: time(400k)/time(50k) should be ~8 (paper: "almost linear")
+    ratio = times[400_000] / times[50_000]
+    rows.append(("fig1_linearity_ratio_8x", 0.0, f"ratio={ratio:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 2: probability distributions in RSP blocks vs whole data
+# ---------------------------------------------------------------------------
+
+def fig2_block_distributions() -> list[Row]:
+    rows: list[Row] = []
+    x, y = make_nonrandom_higgs_like(40_000, seed=3, class_sep=1.5)  # sorted = worst case
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    spec = RSPSpec(num_records=40_000, num_blocks=20, num_original_blocks=20, seed=2)
+    t0 = time.perf_counter()
+    blocks = two_stage_partition_np(data, spec)
+    part_us = (time.perf_counter() - t0) * 1e6
+    label_div = max(max_label_divergence(blocks[k][:, -1], y, 2) for k in range(20))
+    rows.append(("fig2a_label_divergence_rsp_max", part_us, f"linf={label_div:.4f}"))
+    seq_div = max_label_divergence(data[:2000, -1], y, 2)
+    rows.append(("fig2a_label_divergence_seq_chunk", 0.0, f"linf={seq_div:.4f}"))
+    ks = max(ks_statistic(blocks[k][:, 0], data[:, 0]) for k in range(5))
+    rows.append(("fig2b_feature_ks_rsp_max", 0.0, f"ks={ks:.4f}"))
+    mmd = mmd_block_vs_data(blocks[0], data, seed=0)
+    rows.append(("fig2b_mmd_block_vs_data", 0.0, f"mmd2={mmd:.2e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figs 3/4: block-level estimation of means / stds
+# ---------------------------------------------------------------------------
+
+def fig34_estimation_convergence() -> list[Row]:
+    rows: list[Row] = []
+    rng = np.random.default_rng(5)
+    data = (rng.normal(size=(100_000, 8)) * rng.uniform(0.5, 2, 8) + rng.normal(size=8)).astype(
+        np.float32
+    )
+    spec = RSPSpec(num_records=100_000, num_blocks=100, num_original_blocks=100, seed=3)
+    blocks = two_stage_partition_np(data, spec)
+    true_mean, true_std = data.mean(0), data.std(0, ddof=1)
+    est = BlockLevelEstimator()
+    t0 = time.perf_counter()
+    for g, k in enumerate(range(20), start=1):
+        est.update(jnp.asarray(blocks[k]))
+        if g in (1, 5, 10, 20):
+            em = float(np.abs(est.stats.mean - true_mean).max())
+            es = float(np.abs(est.stats.std - true_std).max())
+            rows.append((f"fig3_mean_abs_err_g{g}", 0.0, f"err={em:.5f}"))
+            rows.append((f"fig4_std_abs_err_g{g}", 0.0, f"err={es:.5f}"))
+    us = (time.perf_counter() - t0) * 1e6 / 20
+    rows.append(("fig34_estimator_update", us, "per_block_update"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: asymptotic ensemble accuracy vs blocks used
+# ---------------------------------------------------------------------------
+
+def fig6_ensemble_accuracy() -> list[Row]:
+    rows: list[Row] = []
+    N, Ne, K = 40_000, 8_000, 40
+    x, y = make_higgs_like(N + Ne, seed=2, class_sep=1.5)
+    xe, ye = jnp.asarray(x[N:]), jnp.asarray(y[N:])
+    data = np.concatenate([x[:N], y[:N, None].astype(np.float32)], axis=1)
+    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=5)
+    blocks = two_stage_partition_np(data, spec)
+    bx = jnp.asarray(blocks[:, :, :-1])
+    by = jnp.asarray(blocks[:, :, -1].astype(np.int32))
+    learner = make_logreg(bx.shape[-1], 2, steps=200, lr=0.5)
+
+    t0 = time.perf_counter()
+    ens, hist = asymptotic_ensemble_learn(
+        bx, by, learner=learner, eval_x=xe, eval_y=ye, g=5, seed=0,
+        improvement_tol=5e-4, patience=2,
+    )
+    ens_us = (time.perf_counter() - t0) * 1e6
+    for used, acc in zip(hist.blocks_used, hist.accuracy):
+        rows.append((f"fig6_ensemble_acc_blocks{used}", 0.0, f"acc={acc:.4f}"))
+
+    t0 = time.perf_counter()
+    params = learner.fit(
+        learner.init(jax.random.PRNGKey(1)),
+        jnp.asarray(data[:, :-1]), jnp.asarray(data[:, -1].astype(np.int32)),
+    )
+    jax.block_until_ready(params)
+    single_us = (time.perf_counter() - t0) * 1e6
+    acc_single = float(
+        (jnp.argmax(learner.predict_proba(params, xe), -1) == ye).mean()
+    )
+    rows.append(("fig6_single_full_data_model", single_us, f"acc={acc_single:.4f}"))
+    rows.append((
+        "fig6_summary", ens_us,
+        f"ens_acc={hist.accuracy[-1]:.4f} single_acc={acc_single:.4f} "
+        f"blocks_used={ens.num_models}/{K}",
+    ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: training time, block batches vs whole data
+# ---------------------------------------------------------------------------
+
+def fig7_training_time() -> list[Row]:
+    rows: list[Row] = []
+    N, K = 80_000, 40
+    x, y = make_higgs_like(N, seed=7, class_sep=1.5)
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=5)
+    blocks = two_stage_partition_np(data, spec)
+    bx = jnp.asarray(blocks[:, :, :-1])
+    by = jnp.asarray(blocks[:, :, -1].astype(np.int32))
+    learner = make_logreg(bx.shape[-1], 2, steps=200, lr=0.5)
+    key = jax.random.PRNGKey(0)
+
+    base_time = None
+    for g in (2, 5, 10, 20):
+        fn = lambda: jax.block_until_ready(
+            train_base_models_vmapped(learner, key, bx[:g], by[:g])
+        )
+        us = _timeit(fn, repeat=2)
+        if g == 2:
+            base_time = us
+        rows.append((f"fig7_block_batch_g{g}", us, f"pct_data={100 * g / K:.0f}%"))
+    fn_full = lambda: jax.block_until_ready(
+        learner.fit(
+            learner.init(key),
+            jnp.asarray(data[:, :-1]), jnp.asarray(data[:, -1].astype(np.int32)),
+        )
+    )
+    full_us = _timeit(fn_full, repeat=2)
+    rows.append((
+        "fig7_single_model_all_data", full_us,
+        f"vs_5pct_batch_ratio={full_us / base_time:.2f}",
+    ))
+    return rows
+
+
+ALL_FIGS = [
+    fig1_partition_scaling,
+    fig2_block_distributions,
+    fig34_estimation_convergence,
+    fig6_ensemble_accuracy,
+    fig7_training_time,
+]

@@ -1,0 +1,100 @@
+"""Architecture registry: the 10 assigned configs, reduced smoke variants,
+shape cells, and (arch x shape) applicability.
+
+Cells skipped per the assignment (recorded in EXPERIMENTS.md):
+  * long_500k -- only for sub-quadratic archs (zamba2-7b, rwkv6-1.6b)
+  * decode shapes -- skipped for encoder-only (hubert-xlarge)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import SHAPES, ShapeCell
+from repro.models.config import ModelConfig
+
+from repro.configs.llama3_2_1b import CONFIG as LLAMA32_1B
+from repro.configs.granite_20b import CONFIG as GRANITE_20B
+from repro.configs.qwen3_14b import CONFIG as QWEN3_14B
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_05B
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs.chameleon_34b import CONFIG as CHAMELEON_34B
+from repro.configs.granite_moe_3b_a800m import CONFIG as GRANITE_MOE
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE
+from repro.configs.rwkv6_1_6b import CONFIG as RWKV6_16B
+from repro.configs.hubert_xlarge import CONFIG as HUBERT_XL
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        LLAMA32_1B,
+        GRANITE_20B,
+        QWEN3_14B,
+        QWEN2_05B,
+        ZAMBA2_7B,
+        CHAMELEON_34B,
+        GRANITE_MOE,
+        QWEN3_MOE,
+        RWKV6_16B,
+        HUBERT_XL,
+    ]
+}
+
+# archs allowed to run the long_500k decode cell (sub-quadratic context)
+SUBQUADRATIC = {"zamba2-7b", "rwkv6-1.6b"}
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = ARCHS[arch]
+    cell = SHAPES[shape]
+    if cfg.family == "encoder" and cell.kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: long_500k restricted to SSM/hybrid"
+    return True, ""
+
+
+def cells() -> list[tuple[str, str]]:
+    """All applicable (arch, shape) dry-run cells."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, _ = cell_applicable(arch, shape)
+            if ok:
+                out.append((arch, shape))
+    return out
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    cfg = ARCHS[arch]
+    shrink: dict = dict(
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=256,
+        k_block=16,
+    )
+    if cfg.family == "moe":
+        # ample capacity so smoke decode-vs-forward comparisons see no drops
+        shrink.update(num_experts=8, num_experts_per_token=2, d_ff=32, moe_capacity_factor=8.0)
+    if cfg.family == "hybrid":
+        # exercise the epilogue: 5 layers, shared attn every 2 -> 2 rounds + 1
+        shrink.update(num_layers=5, attn_every=2, ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+    if cfg.family == "rwkv":
+        shrink.update(rwkv_head_dim=16, lora_rank=8, num_heads=4, num_kv_heads=4)
+    return dataclasses.replace(cfg, **shrink)
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ShapeCell",
+    "SUBQUADRATIC",
+    "cell_applicable",
+    "cells",
+    "smoke_config",
+]

@@ -1,0 +1,55 @@
+"""repro.core -- the paper's contribution: the Random Sample Partition model.
+
+Public API:
+    RSPSpec, SamplerState, BlockDescriptor          (types)
+    two_stage_partition_np / _jax, distributed_rsp_partition  (Algorithm 1)
+    BlockSampler, deal_blocks, HostAssignment       (Definition 4)
+    BlockLevelEstimator, block_moments, combine_moments       (Sec. 8)
+    BaseLearner, make_logreg, make_mlp, Ensemble,
+    asymptotic_ensemble_learn                       (Algorithm 2, Sec. 9)
+    mmd2_rbf, hotelling_t2, ks_statistic            (Sec. 7)
+    RSPStore                                        (stored RSP)
+"""
+
+from repro.core.types import BlockDescriptor, RSPSpec, SamplerState
+from repro.core.partition import (
+    distributed_rsp_partition,
+    empirical_cdf,
+    is_partition,
+    randomize_dataset,
+    two_stage_partition_jax,
+    two_stage_partition_np,
+)
+from repro.core.sampler import BlockSampler, HostAssignment, deal_blocks
+from repro.core.estimators import (
+    BlockLevelEstimator,
+    MomentStats,
+    batched_block_moments,
+    block_histogram,
+    block_moments,
+    combine_moments,
+    quantile_from_histogram,
+)
+from repro.core.ensemble import (
+    BaseLearner,
+    Ensemble,
+    EnsembleHistory,
+    asymptotic_ensemble_learn,
+    ensemble_vs_single_model,
+    make_logreg,
+    make_mlp,
+    train_base_models_vmapped,
+)
+from repro.core.similarity import (
+    hotelling_t2,
+    ks_statistic,
+    label_distribution,
+    max_label_divergence,
+    median_heuristic_gamma,
+    mmd2_rbf,
+    mmd_block_vs_data,
+)
+from repro.core.registry import RSPStore
+from repro.core.monitor import DriftMonitor, DriftReport
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,256 @@
+"""Asymptotic ensemble learning framework (paper Sec. 9, Algorithm 2).
+
+Base models are trained on RSP data blocks drawn by block-level sampling and
+folded into an ensemble that is re-evaluated after every batch; the loop stops
+when the evaluation metric plateaus or blocks run out.
+
+Beyond-paper adaptation: all ``g`` base models of a batch are trained
+*simultaneously* with ``jax.vmap`` over the stacked blocks -- the paper's
+"perfectly parallel" executor pool becomes a single vectorized XLA program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampler import BlockSampler
+
+Array = jax.Array
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Base learners (pure JAX; substrate built in-repo, no sklearn)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BaseLearner:
+    """init/fit/predict triple.  ``fit`` trains on one block; all functions
+    are vmap-able over a leading block axis."""
+
+    name: str
+    init: Callable[[Array, int, int], Params]
+    fit: Callable[[Params, Array, Array], Params]
+    predict_proba: Callable[[Params, Array], Array]
+
+
+def _gd_train(loss_fn, params: Params, steps: int, lr: float) -> Params:
+    grad_fn = jax.grad(loss_fn)
+
+    def body(_, p):
+        g = grad_fn(p)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+
+    return jax.lax.fori_loop(0, steps, body, params)
+
+
+def make_logreg(num_features: int, num_classes: int, *, steps: int = 300, lr: float = 0.5) -> BaseLearner:
+    """Multinomial logistic regression trained with full-batch GD."""
+
+    def init(key: Array, f: int = num_features, c: int = num_classes) -> Params:
+        return {
+            "w": 0.01 * jax.random.normal(key, (f, c), jnp.float32),
+            "b": jnp.zeros((c,), jnp.float32),
+        }
+
+    def fit(params: Params, x: Array, y: Array) -> Params:
+        x = x.astype(jnp.float32)
+        y1h = jax.nn.one_hot(y, num_classes)
+
+        def loss(p):
+            logits = x @ p["w"] + p["b"]
+            return -(y1h * jax.nn.log_softmax(logits)).sum(-1).mean() + 1e-4 * (p["w"] ** 2).sum()
+
+        return _gd_train(loss, params, steps, lr)
+
+    def predict_proba(params: Params, x: Array) -> Array:
+        return jax.nn.softmax(x.astype(jnp.float32) @ params["w"] + params["b"])
+
+    return BaseLearner("logreg", init, fit, predict_proba)
+
+
+def make_mlp(
+    num_features: int,
+    num_classes: int,
+    *,
+    hidden: int = 32,
+    steps: int = 400,
+    lr: float = 0.05,
+) -> BaseLearner:
+    """One-hidden-layer MLP trained with full-batch GD + momentum."""
+
+    def init(key: Array, f: int = num_features, c: int = num_classes) -> Params:
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (f, hidden), jnp.float32) * (2.0 / f) ** 0.5,
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": jax.random.normal(k2, (hidden, c), jnp.float32) * (2.0 / hidden) ** 0.5,
+            "b2": jnp.zeros((c,), jnp.float32),
+        }
+
+    def fit(params: Params, x: Array, y: Array) -> Params:
+        x = x.astype(jnp.float32)
+        y1h = jax.nn.one_hot(y, num_classes)
+
+        def loss(p):
+            h = jax.nn.relu(x @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            return -(y1h * jax.nn.log_softmax(logits)).sum(-1).mean()
+
+        grad_fn = jax.grad(loss)
+        mom = jax.tree.map(jnp.zeros_like, params)
+
+        def body(_, carry):
+            p, m = carry
+            g = grad_fn(p)
+            m = jax.tree.map(lambda mi, gi: 0.9 * mi + gi, m, g)
+            p = jax.tree.map(lambda w, mi: w - lr * mi, p, m)
+            return p, m
+
+        params, _ = jax.lax.fori_loop(0, steps, body, (params, mom))
+        return params
+
+    def predict_proba(params: Params, x: Array) -> Array:
+        h = jax.nn.relu(x.astype(jnp.float32) @ params["w1"] + params["b1"])
+        return jax.nn.softmax(h @ params["w2"] + params["b2"])
+
+    return BaseLearner("mlp", init, fit, predict_proba)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized batch training (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def train_base_models_vmapped(
+    learner: BaseLearner, key: Array, xs: Array, ys: Array
+) -> Params:
+    """Train g base models simultaneously on stacked blocks [g, n, F]/[g, n]."""
+    g = xs.shape[0]
+    keys = jax.random.split(key, g)
+
+    @jax.jit
+    def run(keys, xs, ys):
+        def one(k, x, y):
+            return learner.fit(learner.init(k), x, y)
+
+        return jax.vmap(one)(keys, xs, ys)
+
+    return run(keys, xs, ys)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble container + Algorithm 2 loop
+# ---------------------------------------------------------------------------
+
+class Ensemble:
+    """A bag of base models with probability-averaging combination."""
+
+    def __init__(self, learner: BaseLearner):
+        self.learner = learner
+        self._stacked: Params | None = None  # leaves have leading model axis
+        self.num_models = 0
+
+    def add_stacked(self, params: Params, count: int) -> None:
+        if self._stacked is None:
+            self._stacked = params
+        else:
+            self._stacked = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), self._stacked, params
+            )
+        self.num_models += count
+
+    def predict_proba(self, x: Array) -> Array:
+        if self._stacked is None:
+            raise ValueError("empty ensemble")
+        probs = jax.vmap(lambda p: self.learner.predict_proba(p, x))(self._stacked)
+        return probs.mean(axis=0)
+
+    def accuracy(self, x: Array, y: Array) -> float:
+        return float((jnp.argmax(self.predict_proba(x), -1) == y).mean())
+
+
+@dataclasses.dataclass
+class EnsembleHistory:
+    blocks_used: list[int] = dataclasses.field(default_factory=list)
+    accuracy: list[float] = dataclasses.field(default_factory=list)
+
+
+def asymptotic_ensemble_learn(
+    blocks_x: Array,
+    blocks_y: Array,
+    *,
+    learner: BaseLearner,
+    eval_x: Array,
+    eval_y: Array,
+    g: int,
+    seed: int = 0,
+    improvement_tol: float = 1e-3,
+    patience: int = 2,
+    max_batches: int | None = None,
+) -> tuple[Ensemble, EnsembleHistory]:
+    """Algorithm 2: batches of g blocks -> vmapped base models -> ensemble
+    update -> evaluation; stop on plateau or block exhaustion.
+
+    ``blocks_x``: [K, n, F] stacked RSP blocks; ``blocks_y``: [K, n].
+    """
+    K = blocks_x.shape[0]
+    sampler = BlockSampler(K, seed=seed)
+    ensemble = Ensemble(learner)
+    history = EnsembleHistory()
+    key = jax.random.PRNGKey(seed)
+    stall = 0
+    batch_idx = 0
+    while sampler.remaining_in_epoch() > 0:
+        if max_batches is not None and batch_idx >= max_batches:
+            break
+        ids = sampler.sample(min(g, sampler.remaining_in_epoch()))
+        key, sub = jax.random.split(key)
+        params = train_base_models_vmapped(
+            learner, sub, blocks_x[jnp.asarray(ids)], blocks_y[jnp.asarray(ids)]
+        )
+        ensemble.add_stacked(params, len(ids))
+        acc = ensemble.accuracy(eval_x, eval_y)
+        history.blocks_used.append(ensemble.num_models)
+        history.accuracy.append(acc)
+        if len(history.accuracy) > 1:
+            if acc - max(history.accuracy[:-1]) < improvement_tol:
+                stall += 1
+            else:
+                stall = 0
+            if stall >= patience:
+                break
+        batch_idx += 1
+    return ensemble, history
+
+
+def ensemble_vs_single_model(
+    blocks_x: Array,
+    blocks_y: Array,
+    eval_x: Array,
+    eval_y: Array,
+    *,
+    learner: BaseLearner,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """Fig-6 comparison: (ensemble accuracy, single-full-data-model accuracy)."""
+    ens, _ = asymptotic_ensemble_learn(
+        blocks_x,
+        blocks_y,
+        learner=learner,
+        eval_x=eval_x,
+        eval_y=eval_y,
+        g=min(5, blocks_x.shape[0]),
+        seed=seed,
+    )
+    full_x = blocks_x.reshape(-1, blocks_x.shape[-1])
+    full_y = blocks_y.reshape(-1)
+    params = learner.fit(learner.init(jax.random.PRNGKey(seed + 1)), full_x, full_y)
+    single_acc = float(
+        (jnp.argmax(learner.predict_proba(params, eval_x), -1) == eval_y).mean()
+    )
+    return ens.accuracy(eval_x, eval_y), single_acc

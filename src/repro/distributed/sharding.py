@@ -1,0 +1,292 @@
+"""Logical-axis sharding: maps ParamSpec axis names to mesh axes, builds
+NamedShardings for params / optimizer state / batches, and provides the
+activation-constraint hook the model code consults.
+
+Default rules (DP x TP on a ("data", "model") or ("pod", "data", "model")
+mesh):
+    batch    -> (pod, data)        vocab   -> model
+    heads    -> model              ff      -> model
+    kv_heads -> model iff the arch has >= MIN_KV_SHARD kv heads (GQA padding
+                waste is bounded); otherwise replicated (MQA keeps the single
+                KV head on every model rank)
+    experts  -> model              embed   -> replicated
+    layers / inner / seq / None -> replicated (scan / contraction dims)
+
+ZeRO-1: optimizer master/m/v additionally shard their largest replicated,
+divisible dimension over "data" -- GSPMD then emits reduce-scatter +
+all-gather in place of all-reduce for the gradient/update path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec
+
+MIN_KV_SHARD = 4
+
+MeshAxes = tuple[str, ...] | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, MeshAxes]
+
+    def spec_for(self, axes: tuple[str | None, ...]) -> P:
+        return P(*[self.rules.get(a) if a is not None else None for a in axes])
+
+    def named(self, axes: tuple[str | None, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes))
+
+
+def default_rules(
+    mesh: Mesh,
+    *,
+    num_kv_heads: int = 8,
+    shard_kv_seq: bool = False,
+    cfg=None,
+) -> ShardingRules:
+    """Arch-aware rules.  jit *input* shardings must divide dimensions
+    evenly, so every model-axis assignment is gated on divisibility:
+      kv_heads: sharded iff kv % model == 0 (MQA/GQA below that replicates
+                KV and lets the query-group dim carry the TP split)
+      vocab:    sharded iff vocab % model == 0 (e.g. hubert's 504 and
+                granite-moe's 49155 stay replicated)
+      experts:  sharded iff E % model == 0; otherwise the per-expert hidden
+                (expert_ff) takes the TP split instead (granite-moe: E=40)
+    """
+    axes = mesh.axis_names
+    tp = int(mesh.shape["model"]) if "model" in axes else 1
+    dp: MeshAxes = tuple(a for a in ("pod", "data") if a in axes)
+    if len(dp) == 1:
+        dp = dp[0]
+    if cfg is not None:
+        num_kv_heads = cfg.num_kv_heads
+        vocab = cfg.vocab_size
+        experts = cfg.num_experts
+        expert_ff = cfg.d_ff if cfg.num_experts else 0
+        d_ff = cfg.d_ff
+        head_dim = cfg.resolved_head_dim
+    else:
+        vocab, experts, expert_ff, d_ff, head_dim = 1 << 20, 0, 0, 1 << 20, 0
+
+    kv_sharded = num_kv_heads % tp == 0 and num_kv_heads >= tp
+    experts_sharded = experts > 0 and experts % tp == 0
+    rules: dict[str, MeshAxes] = {
+        "batch": dp,
+        "heads": "model",
+        "kv_heads": "model" if kv_sharded else None,
+        # with replicated KV the query-group dim carries the TP split instead
+        "heads_inner": None if kv_sharded else "model",
+        "ff": "model" if d_ff % tp == 0 else None,
+        "vocab": "model" if vocab % tp == 0 else None,
+        "experts": "model" if experts_sharded else None,
+        "expert_ff": None if experts_sharded or expert_ff % tp else "model",
+        "embed": None,
+        "moe_group": "data" if "data" in axes else None,
+        "kv_seq": "data" if shard_kv_seq and "data" in axes else None,
+        # decode KV caches are jit INPUTS: when kv heads are unshardable the
+        # cache head_dim carries the model split (contraction-sharded
+        # attention; GSPMD inserts the score all-reduce)
+        "kv_head_dim": "model" if (not kv_sharded and head_dim and head_dim % tp == 0) else None,
+        "layers": None,
+        "inner": None,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Param / state shardings
+# ---------------------------------------------------------------------------
+
+def param_shardings(specs: Any, rules: ShardingRules) -> Any:
+    """NamedSharding tree matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: rules.named(s.axes), specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def _data_axis_size(mesh: Mesh) -> int:
+    return int(mesh.shape["data"]) if "data" in mesh.axis_names else 1
+
+
+def zero_shard_spec(spec: ParamSpec, rules: ShardingRules) -> P:
+    """ZeRO-1: extend the param spec by sharding one replicated dim over
+    'data'.  Picks the largest dimension that is unsharded and divisible."""
+    base = list(rules.spec_for(spec.axes))
+    dsize = _data_axis_size(rules.mesh)
+    if dsize <= 1:
+        return P(*base)
+    cand = [
+        (dim_size, i)
+        for i, (dim_size, assigned) in enumerate(zip(spec.shape, base))
+        if assigned is None and dim_size % dsize == 0 and dim_size >= dsize
+    ]
+    if not cand:
+        return P(*base)
+    _, idx = max(cand)
+    base[idx] = "data"
+    return P(*base)
+
+
+def optimizer_shardings(specs: Any, rules: ShardingRules) -> dict:
+    """Shardings for the AdamW state {master, m, v, step}."""
+    leaf = lambda s: NamedSharding(rules.mesh, zero_shard_spec(s, rules))
+    tree = jax.tree.map(leaf, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {
+        "master": tree,
+        "m": tree,
+        "v": tree,
+        "step": NamedSharding(rules.mesh, P()),
+    }
+
+
+def batch_shardings(batch_specs: dict, rules: ShardingRules) -> dict:
+    """Inputs: leading dim is the global batch -> DP axes."""
+    dp = rules.rules["batch"]
+
+    def leaf(s: jax.ShapeDtypeStruct):
+        spec = [None] * len(s.shape)
+        if s.shape and s.shape[0] > 1:
+            spec[0] = dp
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (consulted from model code via `constrain`)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: contextvars.ContextVar[ShardingRules | None] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: ShardingRules | None):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def constrain(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """with_sharding_constraint against the active rules (no-op outside a
+    mesh context, so smoke tests and single-device runs are unaffected).
+
+    Size-aware: dims of extent 1 stay unsharded (single-stream decode), and
+    if two logical axes resolve to the same mesh axis only the first keeps
+    it (e.g. batch and kv_seq both wanting 'data' in long-context decode)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} rank != array rank {x.ndim}")
+    used: set[str] = set()
+    spec: list[MeshAxes] = []
+    for dim, a in zip(x.shape, axes):
+        r = rules.rules.get(a) if a is not None else None
+        if r is None or dim <= 1:
+            spec.append(None)
+            continue
+        names = r if isinstance(r, tuple) else (r,)
+        if any(n in used for n in names):
+            spec.append(None)
+            continue
+        used.update(names)
+        spec.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec))
+    )
+
+
+def cache_shardings(caches_abstract: Any, rules: ShardingRules) -> Any:
+    """Shardings for decode caches, matched by leaf path.
+
+    Cache layouts (leading dim = stacked layers / invocations):
+      attn k/v   [L, B, Hkv, T, D] -> (None, batch, kv_heads, kv_seq, None)
+      attn len   [L]               -> replicated
+      mamba conv [L, B, K-1, Ch]   -> (None, batch, None, heads)
+      mamba ssm  [L, B, H, P, N]   -> (None, batch, heads, None, None)
+      rwkv shift [L, B, 1, d]      -> (None, batch, None, None)
+      rwkv wkv   [L, B, H, C, C]   -> (None, batch, heads, None, None)
+      pos        []                -> replicated
+    Batch stays replicated when B == 1 (long-context single-stream decode).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_abstract)
+
+    def spec_for(path: str, shape: tuple[int, ...]) -> P:
+        def b(dim: int) -> MeshAxes:
+            return rules.rules["batch"] if shape[dim] > 1 else None
+
+        if path.endswith("['k']") or path.endswith("['v']"):
+            return P(
+                None, b(1), rules.rules["kv_heads"], rules.rules["kv_seq"],
+                rules.rules.get("kv_head_dim"),
+            )
+        if path.endswith("['conv']"):
+            return P(None, b(1), None, rules.rules["heads"])
+        if path.endswith("['ssm']"):
+            return P(None, b(1), rules.rules["heads"], None, None)
+        if path.endswith("['wkv']"):
+            return P(None, b(1), rules.rules["heads"], None, None)
+        if path.endswith("['shift']"):
+            return P(None, b(1), None, None)
+        return P()  # length / pos scalars
+
+    out = [
+        NamedSharding(rules.mesh, spec_for(jax.tree_util.keystr(path), leaf.shape))
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def attach_shardings(abstract: Any, shardings: Any) -> Any:
+    """Rebuild ShapeDtypeStructs with shardings attached."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract,
+        shardings,
+    )
+
+
+def abstract_state(specs: Any, rules: ShardingRules) -> dict:
+    """ShapeDtypeStruct AdamW state with ZeRO shardings (for dry-run)."""
+    import jax.numpy as jnp
+
+    def master_leaf(s: ParamSpec):
+        return jax.ShapeDtypeStruct(
+            s.shape, jnp.float32, sharding=NamedSharding(rules.mesh, zero_shard_spec(s, rules))
+        )
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    tree = jax.tree.map(master_leaf, specs, is_leaf=is_spec)
+    return {
+        "master": tree,
+        "m": tree,
+        "v": tree,
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(rules.mesh, P())),
+    }
+
+
+def abstract_compute_params(specs: Any, rules: ShardingRules, dtype=None) -> Any:
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.bfloat16
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def leaf(s: ParamSpec):
+        dt = dtype if np.issubdtype(np.dtype(s.dtype), np.floating) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt, sharding=rules.named(s.axes))
+
+    return jax.tree.map(leaf, specs, is_leaf=is_spec)

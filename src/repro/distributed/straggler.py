@@ -1,0 +1,128 @@
+"""Straggler-aware RSP block scheduling (lease-based work stealing).
+
+Because every RSP block is statistically exchangeable with every other
+(Definition 3), the scheduler may re-assign blocks freely: a straggling host
+loses its unstarted leases to faster hosts with zero statistical penalty --
+the final set of processed blocks is still a uniform block-level sample.
+The paper (Sec. 7) anticipates exactly this: "this sampling process can be
+refined to select blocks depending on the availability of nodes".
+
+``simulate`` is a deterministic event simulation used by tests and the Fig-7
+style benchmark; ``LeaseScheduler`` is the runtime object a real launcher
+would drive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class LeaseScheduler:
+    """Blocks are leased in small windows; hosts request more when done."""
+
+    block_ids: list[int]
+    lease_window: int = 2
+
+    def __post_init__(self):
+        self._queue = list(self.block_ids)[::-1]  # pop from end
+        self._leases: dict[int, list[int]] = {}
+        self._done: set[int] = set()
+
+    def request(self, host: int) -> list[int]:
+        grant = []
+        while self._queue and len(grant) < self.lease_window:
+            grant.append(self._queue.pop())
+        self._leases.setdefault(host, []).extend(grant)
+        return grant
+
+    def complete(self, host: int, block_id: int) -> None:
+        self._leases[host].remove(block_id)
+        self._done.add(block_id)
+
+    def steal_from(self, slow_host: int) -> list[int]:
+        """Return a slow host's *unstarted* leases to the queue."""
+        stolen = self._leases.get(slow_host, [])
+        self._leases[slow_host] = []
+        self._queue.extend(stolen[::-1])
+        return stolen
+
+    @property
+    def all_done(self) -> bool:
+        return len(self._done) == len(self.block_ids) and not self._queue
+
+    @property
+    def done_blocks(self) -> set[int]:
+        return set(self._done)
+
+
+def simulate(
+    num_blocks: int,
+    host_speeds: Sequence[float],
+    *,
+    lease_window: int = 2,
+    steal: bool = True,
+    steal_threshold: float = 2.0,
+) -> dict:
+    """Event simulation: returns {makespan, per_host_blocks, stolen}.
+
+    ``host_speeds[h]`` = blocks/time-unit.  With ``steal=False`` this is the
+    static round-robin deal (the paper's naive batch assignment).
+    """
+    H = len(host_speeds)
+    sched = LeaseScheduler(list(range(num_blocks)), lease_window=lease_window)
+    per_host: dict[int, list[int]] = {h: [] for h in range(H)}
+    stolen_total = 0
+
+    if not steal:
+        # static deal: host h gets blocks h, h+H, ... processes sequentially
+        makespan = 0.0
+        for h in range(H):
+            mine = list(range(h, num_blocks, H))
+            per_host[h] = mine
+            makespan = max(makespan, len(mine) / host_speeds[h])
+        return {"makespan": makespan, "per_host_blocks": per_host, "stolen": 0}
+
+    # dynamic leases: (finish_time, host, block)
+    now = 0.0
+    events: list[tuple[float, int, int]] = []
+    active: dict[int, int] = {}
+
+    def start_next(h: int, t: float) -> None:
+        mine = sched._leases.get(h, [])
+        running = active.get(h)
+        for b in mine:
+            if b != running and b not in sched._done:
+                active[h] = b
+                heapq.heappush(events, (t + 1.0 / host_speeds[h], h, b))
+                return
+        grant = sched.request(h)
+        if grant:
+            active[h] = grant[0]
+            heapq.heappush(events, (t + 1.0 / host_speeds[h], h, grant[0]))
+
+    for h in range(H):
+        sched.request(h)
+        start_next(h, 0.0)
+
+    mean_speed = sum(host_speeds) / H
+    while events:
+        now, h, b = heapq.heappop(events)
+        if b in sched._done:
+            continue
+        sched.complete(h, b)
+        per_host[h].append(b)
+        # steal unstarted leases from hosts much slower than the mean
+        if sched._queue == [] and steal:
+            for s in range(H):
+                if s != h and host_speeds[s] < mean_speed / steal_threshold:
+                    pending = [x for x in sched._leases.get(s, []) if x != active.get(s)]
+                    for blk in pending:
+                        sched._leases[s].remove(blk)
+                        sched._queue.append(blk)
+                        stolen_total += 1
+        start_next(h, now)
+
+    return {"makespan": now, "per_host_blocks": per_host, "stolen": stolen_total}

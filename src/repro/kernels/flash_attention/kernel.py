@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (causal / bidirectional, GQA via index maps).
+
+Grid: (B, H, num_q_blocks, num_kv_blocks); the kv dimension is innermost and
+sequential, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch that persists across kv iterations.  K/V BlockSpecs map query head h
+to kv head h // group_size, so grouped heads never materialize expanded K/V.
+Causal block-skipping: kv blocks strictly above the diagonal are skipped
+(`pl.when`), recovering the ~2x causal FLOP saving the jnp path wastes.
+
+MXU alignment: block_q/block_k default to 128 and head_dim is padded by the
+wrapper (ops.py) to a multiple of 128 if needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, causal: bool, scale: float, block_q: int, block_k: int, nk: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: the last kv block that can contribute to q block i
+    last_j = ((i + 1) * block_q - 1) // block_k if causal else nk - 1
+
+    @pl.when(j <= last_j)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                     # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)                     # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                               # [bq, bk]
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == (nk - 1 if not causal else jnp.minimum(last_j, nk - 1)))
+    def _write():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...][:, None], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,        # [B, H, S, D]
+    k: jax.Array,        # [B, Hkv, S, D]
+    v: jax.Array,        # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    if S % block_q or S % block_k:
+        raise ValueError(f"S={S} must be divisible by block sizes ({block_q}, {block_k})")
+    nq, nk = S // block_q, S // block_k
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, scale=scale, block_q=block_q, block_k=block_k, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),       # l: running sum
+            pltpu.VMEM((block_q, D), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

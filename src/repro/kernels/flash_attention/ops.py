@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts grouped-query layout [B, Hkv, G, S, D] (the model's native shape) or
+flat [B, H, S, D]; pads head_dim to an MXU-friendly multiple of 128 and picks
+block sizes that divide the sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _pick_block(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    grouped = q.ndim == 5
+    if grouped:
+        B, Hkv, G, S, D = q.shape
+        qf = q.reshape(B, Hkv * G, S, D)
+    else:
+        B, H, S, D = q.shape
+        qf = q
+
+    # pad head_dim to a lane-aligned multiple (MXU likes 128)
+    D = qf.shape[-1]
+    scale = 1.0 / (D**0.5)
+    pad_d = (-D) % 128 if D > 64 else (-D) % 64
+    if pad_d:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(S, block_k)
+    out = flash_attention_pallas(
+        qf, k, v, causal=causal, block_q=bq, block_k=bk, scale=scale, interpret=interpret
+    )
+    if pad_d:
+        out = out[..., :D]
+    if grouped:
+        return out.reshape(B, Hkv, G, S, D)
+    return out

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,        # [B, H, S, D]
+    k: jax.Array,        # [B, Hkv, S, D]
+    v: jax.Array,        # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (D**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the Mamba2 SSD inner loop.
+
+Grid: (B, num_head_tiles, num_chunks); the chunk dimension is innermost and
+sequential, so the inter-chunk SSM state [Ht, P, N] lives in VMEM scratch and
+never round-trips to HBM -- that is the whole point versus the XLA scan,
+whose per-chunk state traffic is HBM-bound.
+
+Per grid step the kernel computes, entirely in VMEM:
+  intra-chunk:  (C B^T  .  exp(cum_i - cum_j) mask)  @  xbar      (MXU)
+  inter-chunk:  C @ (exp(cum_i) * h_state)                        (MXU)
+  state update: h = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) B_j xbar_j^T
+
+All decay exponents are non-positive: numerically safe at any chunk size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dA_ref, B_ref, C_ref, y_ref, hout_ref, h_scr, *, nc: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, Ht, P]
+    dA = dA_ref[0].astype(jnp.float32)        # [Q, Ht]
+    Bm = B_ref[0].astype(jnp.float32)         # [Q, N]
+    Cm = C_ref[0].astype(jnp.float32)         # [Q, N]
+    Q, Ht, P = x.shape
+    N = Bm.shape[-1]
+
+    cum = jnp.cumsum(dA, axis=0)              # [Q, Ht]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)       # [Q, Q]
+    rel = cum[:, None, :] - cum[None, :, :]                            # [Q, Q, Ht]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (Q, Q), 1
+    )
+    M = jnp.where(causal[:, :, None], jnp.exp(rel), 0.0)               # [Q, Q, Ht]
+    scores = CB[:, :, None] * M                                        # [Q, Q, Ht]
+    # y_diag[q, h, p] = sum_k scores[q, k, h] * x[k, h, p]
+    y_diag = jnp.einsum("qkh,khp->qhp", scores, x)
+
+    # inter-chunk: y_off[q, h, p] = exp(cum[q, h]) * sum_n C[q, n] h_scr[h, p, n]
+    h_prev = h_scr[...]                                                # [Ht, P, N]
+    y_off = jnp.einsum("qn,hpn->qhp", Cm, h_prev) * jnp.exp(cum)[:, :, None]
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update
+    decay_to_end = jnp.exp(cum[-1][None, :] - cum)                     # [Q, Ht]
+    # S_c[h, p, n] = sum_k decay[k, h] * x[k, h, p] * B[k, n]
+    S_c = jnp.einsum("kh,khp,kn->hpn", decay_to_end, x, Bm)
+    h_scr[...] = h_prev * jnp.exp(cum[-1])[:, None, None] + S_c
+
+    @pl.when(c == nc - 1)
+    def _write_state():
+        hout_ref[0] = h_scr[...]
+
+
+def ssd_pallas(
+    xbar: jax.Array,   # [B, L, H, P] fp32
+    dA: jax.Array,     # [B, L, H]    fp32 (<= 0)
+    Bm: jax.Array,     # [B, L, N]    fp32
+    Cm: jax.Array,     # [B, L, N]    fp32
+    *,
+    chunk: int = 128,
+    head_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, L, H, P = xbar.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    if L % Q:
+        raise ValueError(f"L={L} must be divisible by chunk={Q}")
+    Ht = min(head_tile, H)
+    if H % Ht:
+        raise ValueError(f"H={H} must be divisible by head_tile={Ht}")
+    nc, nh = L // Q, H // Ht
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, hfinal = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, Ht, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, Ht), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, Ht, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Ht, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Ht, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xbar, dA, Bm, Cm)
+    return y, hfinal

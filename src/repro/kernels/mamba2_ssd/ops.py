@@ -1,0 +1,44 @@
+"""jit'd wrapper for the Mamba2 SSD Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd.kernel import ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_tile", "interpret"))
+def ssd(
+    xbar: jax.Array,
+    dA: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 128,
+    head_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, L, H, P = xbar.shape
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    ht = head_tile
+    while H % ht:
+        ht //= 2
+    y, h = ssd_pallas(
+        xbar.astype(jnp.float32),
+        dA.astype(jnp.float32),
+        Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32),
+        chunk=Q,
+        head_tile=max(ht, 1),
+        interpret=interpret,
+    )
+    return y[:, :L], h

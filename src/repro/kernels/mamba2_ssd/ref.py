@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the SSD kernel: the exact step recurrence."""
+
+from repro.models.mamba2 import ssd_reference as ssd_ref  # noqa: F401
+
+ssd_reference = ssd_ref

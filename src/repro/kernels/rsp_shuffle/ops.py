@@ -1,0 +1,45 @@
+"""jit'd wrapper: generate the hierarchical permutation from a PRNG key and
+apply the kernel.  ``rsp_randomize_block`` is the on-device realization of
+Algorithm 1's per-block randomize step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rsp_shuffle.kernel import rsp_shuffle_pallas
+
+
+def make_permutations(key: jax.Array, n_tiles: int, tile_rows: int):
+    k1, k2 = jax.random.split(key)
+    tile_perm = jax.random.permutation(k1, n_tiles).astype(jnp.int32)
+    intra = jax.vmap(lambda k: jax.random.permutation(k, tile_rows))(
+        jax.random.split(k2, n_tiles)
+    ).astype(jnp.int32)
+    return tile_perm, intra
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def rsp_randomize_block(
+    x: jax.Array, key: jax.Array, *, tile_rows: int = 256, interpret: bool = True
+) -> jax.Array:
+    """Randomize one original block [R, D] on-device (hierarchical shuffle)."""
+    R = x.shape[0]
+    if R % tile_rows:
+        raise ValueError(f"R={R} must be divisible by tile_rows={tile_rows}")
+    tile_perm, intra = make_permutations(key, R // tile_rows, tile_rows)
+    return rsp_shuffle_pallas(x, tile_perm, intra, tile_rows=tile_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def rsp_shuffle(
+    x: jax.Array,
+    tile_perm: jax.Array,
+    intra_perm: jax.Array,
+    *,
+    tile_rows: int,
+    interpret: bool = True,
+) -> jax.Array:
+    return rsp_shuffle_pallas(x, tile_perm, intra_perm, tile_rows=tile_rows, interpret=interpret)

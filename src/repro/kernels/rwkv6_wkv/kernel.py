@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (chunked, VMEM-resident
+state).
+
+Grid: (B, H, num_time_chunks); time is innermost and sequential so the
+[C, V] state matrix stays in VMEM scratch across chunks.  Within a chunk of
+Q steps the data-dependent per-channel decay makes the usual r~/k~
+factorization unstable (one side is exp of a positive cumsum), so the kernel
+materializes the pairwise per-channel decay tensor [Q, Q, C] -- affordable
+*only* at kernel tile sizes (Q=16/32), which is exactly why this is a kernel
+and the jnp model path is a plain scan.
+
+All exponents are non-positive => stable at fp32 for any decay strength.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, y_ref, hout_ref, h_scr, *, nt: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # [Q, C]
+    k = k_ref[0, 0].astype(jnp.float32)       # [Q, C]
+    v = v_ref[0, 0].astype(jnp.float32)       # [Q, V]
+    lw = logw_ref[0, 0].astype(jnp.float32)   # [Q, C]  log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)          # [C]
+    Q, C = r.shape
+
+    cw = jnp.cumsum(lw, axis=0)               # [Q, C] inclusive
+    h_prev = h_scr[...]                       # [C, V]
+
+    # cross-chunk: y_t += (r_t * exp(cw_{t-1})) @ h_prev
+    cw_prev = cw - lw                          # exclusive cumsum (cw_{t-1})
+    r_dec = r * jnp.exp(cw_prev)               # exponents <= 0
+    y = jax.lax.dot_general(r_dec, h_prev, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q, V]
+
+    # intra-chunk, j < t: A[t, j] = sum_c r[t,c] k[j,c] exp(cw_{t-1,c} - cw_{j,c})
+    rel = cw_prev[:, None, :] - cw[None, :, :]                        # [Q, Q, C]
+    strict = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (Q, Q), 1
+    )
+    E = jnp.where(strict[:, :, None], jnp.exp(rel), 0.0)              # [Q, Q, C]
+    A = jnp.einsum("tc,jc,tjc->tj", r, k, E)
+    y = y + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # diagonal bonus: y_t += (sum_c r[t,c] u[c] k[t,c]) * v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)       # [Q, 1]
+    y = y + bonus * v
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(cw_Q) h_prev + sum_j (k_j exp(cw_Q - cw_j)) v_j^T
+    k_dec = k * jnp.exp(cw[-1][None, :] - cw)                          # <= 0 exps
+    h_new = h_prev * jnp.exp(cw[-1])[:, None] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    h_scr[...] = h_new
+
+    @pl.when(t == nt - 1)
+    def _write_state():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def wkv6_pallas(
+    r: jax.Array,      # [B, T, H, C] fp32
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,   # [B, T, H, C] log decay (<= 0)
+    u: jax.Array,      # [H, C]
+    *,
+    chunk: int = 16,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, H, C = r.shape
+    Q = min(chunk, T)
+    if T % Q:
+        raise ValueError(f"T={T} must be divisible by chunk={Q}")
+    nt = T // Q
+
+    def reorder(a):  # [B, T, H, C] -> [B, H, T, C]
+        return jnp.moveaxis(a, 2, 1)
+
+    kernel = functools.partial(_wkv_kernel, nt=nt)
+    y, hfinal = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, C), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Q, C), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Q, C), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Q, C), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, C), lambda b, h, t: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, C), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, C, C), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, C, C), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((C, C), jnp.float32)],
+        interpret=interpret,
+    )(reorder(r), reorder(k), reorder(v), reorder(logw), u)
+    return jnp.moveaxis(y, 1, 2), hfinal

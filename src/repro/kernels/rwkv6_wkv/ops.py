@@ -1,0 +1,41 @@
+"""jit'd wrapper for the RWKV6 WKV Pallas kernel.
+
+Takes multiplicative decay ``w`` in (0, 1) (the model-side convention) and
+converts to log space for the kernel.  Pads T to a chunk multiple with
+identity steps (log w = 0, k = 0: state untouched, outputs sliced off).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(
+    r: jax.Array,      # [B, T, H, C]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,      # decay in (0, 1)
+    u: jax.Array,      # [H, C]
+    *,
+    chunk: int = 16,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, H, C = r.shape
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        logw = zeros(logw)  # log w = 0 -> decay 1 -> state untouched
+    y, h = wkv6_pallas(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logw, u.astype(jnp.float32), chunk=Q, interpret=interpret,
+    )
+    return y[:, :T], h

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle: the exact WKV6 step recurrence (from the model path)."""
+
+from repro.models.rwkv6 import wkv6_scan  # noqa: F401

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production mesh and extract memory / cost / collective
+statistics for the roofline analysis.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first init, and the dry run needs 512 placeholder host
+devices to build the 16x16 (single-pod) and 2x16x16 (multi-pod) meshes.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun      # subprocess per cell
+    python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, cells
+from repro.distributed.sharding import (
+    abstract_compute_params,
+    abstract_state,
+    attach_shardings,
+    batch_shardings,
+    cache_shardings,
+    default_rules,
+)
+from repro.launch import mesh as mesh_lib
+from repro.models import api
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainConfig, make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\w[\w\d.]*)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+)
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device output bytes of every collective op in the compiled
+    (post-SPMD-partitioning) module, bucketed by collective kind."""
+    out: dict[str, dict] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        bucket = out.setdefault(kind, {"count": 0, "bytes": 0})
+        bucket["count"] += 1
+        bucket["bytes"] += nbytes
+    return out
+
+
+def _loop_trip_counts(hlo_text: str) -> list[int]:
+    """Extract while-loop trip counts so scan-body collectives can be scaled
+    by the number of layer iterations."""
+    return [int(x) for x in re.findall(r'"known_trip_count":\{"n":"(\d+)"', hlo_text)]
+
+
+def build_cell(arch: str, shape: str, *, multi_pod: bool, optimized: bool = False):
+    """Returns (jitted_fn, example_args) with fully-sharded abstract inputs.
+
+    ``optimized=True`` applies the beyond-paper perf flags (flat-head
+    attention TP layout, seq-chunked CE); the default is the paper-faithful
+    baseline.  Both variants are recorded in EXPERIMENTS.md §Perf.
+    """
+    import dataclasses as _dc
+
+    cfg = ARCHS[arch]
+    if optimized:
+        cfg = _dc.replace(
+            cfg, flat_attention=True, loss_seq_chunks=16, moe_sort_dispatch=True
+        )
+    cell = SHAPES[shape]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh, cfg=cfg, shard_kv_seq=(shape == "long_500k"))
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    specs = api.model_specs(cfg)
+    batch_abs = api.input_specs(cfg, cell)
+    batch = attach_shardings(batch_abs, batch_shardings(batch_abs, rules))
+
+    if cell.kind == "train":
+        moe_groups = dp if cfg.family == "moe" else 1
+        train_cfg = TrainConfig(total_steps=1000, warmup_steps=10, moe_groups=moe_groups)
+        step = make_train_step(cfg, AdamWConfig(), train_cfg, rules=rules)
+        state = {
+            "params": abstract_compute_params(specs, rules),
+            "opt": abstract_state(specs, rules),
+        }
+        return jax.jit(step, donate_argnums=0), (state, batch)
+
+    params = abstract_compute_params(specs, rules)
+    if cfg.family == "encoder":
+        # prefill == encoder forward
+        from repro.distributed.sharding import activation_sharding
+        fwd = api.make_forward_fn(cfg)
+
+        def enc_fn(params, batch):
+            from repro.distributed.sharding import activation_sharding as ash
+            with ash(rules):
+                return fwd(params, batch)
+
+        return jax.jit(enc_fn), (params, batch)
+
+    moe_groups = dp if cfg.family == "moe" else 1
+    caches_abs = api.cache_specs(cfg, cell.global_batch, cell.seq_len)
+    caches = attach_shardings(caches_abs, cache_shardings(caches_abs, rules))
+
+    if cell.kind == "prefill":
+        inner = api.make_prefill_fn(cfg, moe_groups=moe_groups)
+    else:
+        inner = api.make_decode_fn(cfg, moe_groups=moe_groups)
+
+    def fn(params, caches, batch):
+        from repro.distributed.sharding import activation_sharding as ash
+        with ash(rules):
+            return inner(params, caches, batch)
+
+    return jax.jit(fn, donate_argnums=1), (params, caches, batch)
+
+
+def dryrun_cell(
+    arch: str, shape: str, *, multi_pod: bool, save_hlo: str | None = None,
+    optimized: bool = False,
+) -> dict:
+    ok, why = cell_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod, "skipped": why}
+    t0 = time.time()
+    fn, args = build_cell(arch, shape, multi_pod=multi_pod, optimized=optimized)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    result: dict = {
+        "arch": arch,
+        "shape": shape,
+        "multi_pod": multi_pod,
+        "optimized": optimized,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        print("memory_analysis:", result["memory"])
+    except Exception as e:  # backend-dependent
+        result["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        result["cost"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals")
+            or k.startswith("bytes accessed")
+        }
+        print("cost_analysis flops:", result["cost"].get("flops"))
+    except Exception as e:
+        result["cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    result["collectives_unscaled"] = parse_collectives(hlo)
+    result["loop_trip_counts"] = _loop_trip_counts(hlo)
+    result["hlo_bytes"] = len(hlo)
+    # structural accounting: per-computation costs x while trip counts
+    from repro.launch.roofline import analyze_hlo
+
+    result["analysis"] = analyze_hlo(hlo)
+    print(
+        "structural: flops={flops:.3e} bytes={bytes:.3e} collectives={c}".format(
+            flops=result["analysis"]["flops"],
+            bytes=result["analysis"]["bytes"],
+            c={k: f"{v['bytes']:.2e}" for k, v in result["analysis"]["collectives"].items()},
+        )
+    )
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    del hlo
+    return result
+
+
+def dryrun_rsp_partition(*, multi_pod: bool, records: int | None = None) -> dict:
+    """Dry-run the paper's Algorithm-1 collective program (shard_map +
+    all_to_all) on the production mesh: the partition stage of the RSP data
+    model, lowered exactly as it would run during corpus preparation.
+
+    Records are 4097-token sequences (the train_4k record).  The multi-pod
+    variant partitions within each pod; cross-pod RSP validity follows from
+    Theorem 1 (proportional unions of RSP blocks).
+    """
+    from repro.core.partition import distributed_rsp_partition
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    D = int(mesh.shape["data"])
+    if records is None:
+        records = D * D * 64          # delta = 64 records per sub-block
+    seq = 4097
+    data = jax.ShapeDtypeStruct(
+        (records, seq), jnp.int32,
+        sharding=jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("data", None)
+        ),
+    )
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def fn(data, key):
+        return distributed_rsp_partition(data, key, mesh, axis="data")
+
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(data, key)
+    compiled = lowered.compile()
+    result = {
+        "arch": "rsp-partition",
+        "shape": f"records{records}x{seq}",
+        "multi_pod": multi_pod,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:
+        result["memory"] = {"error": str(e)}
+    from repro.launch.roofline import analyze_hlo
+
+    result["analysis"] = analyze_hlo(compiled.as_text())
+    return result
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=sorted(ARCHS) + ["rsp-partition"], default=None)
+    p.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--optimized", action="store_true",
+                   help="beyond-paper perf flags (flat attention, chunked CE)")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true", help="run every applicable cell in subprocesses")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--save-hlo", default=None)
+    p.add_argument("--timeout", type=int, default=3000)
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.arch == "rsp-partition":
+        result = dryrun_rsp_partition(multi_pod=args.multi_pod)
+        tag = f"rsp-partition_{'multi' if args.multi_pod else 'single'}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+        print(json.dumps(result, indent=1))
+        return 0
+
+    if args.all:
+        failures = []
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        all_cells = cells() + [("rsp-partition", "corpus")]
+        for arch, shape in all_cells:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                out_file = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_file):
+                    print(f"[skip existing] {tag}")
+                    continue
+                if arch == "rsp-partition":
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--out", args.out,
+                    ] + (["--multi-pod"] if mp else [])
+                    tag = f"rsp-partition_{'multi' if mp else 'single'}"
+                    out_file = os.path.join(args.out, tag + ".json")
+                    if os.path.exists(out_file):
+                        continue
+                else:
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--out", args.out,
+                    ] + (["--multi-pod"] if mp else [])
+                print(f"[run] {tag}", flush=True)
+                proc = subprocess.run(cmd, capture_output=True, text=True, timeout=args.timeout)
+                if proc.returncode != 0:
+                    failures.append(tag)
+                    with open(os.path.join(args.out, tag + ".err"), "w") as f:
+                        f.write(proc.stdout[-5000:] + "\n" + proc.stderr[-10000:])
+                    print(f"[FAIL] {tag}")
+        print(f"done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    if not args.arch or not args.shape:
+        p.error("--arch/--shape required unless --all")
+    try:
+        result = dryrun_cell(
+            args.arch, args.shape, multi_pod=args.multi_pod, save_hlo=args.save_hlo,
+            optimized=args.optimized,
+        )
+    except Exception:
+        traceback.print_exc()
+        return 1
+    tag = f"{args.arch}_{args.shape}_{'multi' if args.multi_pod else 'single'}"
+    if args.optimized:
+        tag += "_opt"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    print(json.dumps({k: v for k, v in result.items() if k != "loop_trip_counts"}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+# Intentionally minimal: submodules are imported directly
+# (repro.models.api, repro.models.transformer, ...) to avoid import cycles
+# with repro.distributed.sharding.

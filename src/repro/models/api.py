@@ -1,0 +1,112 @@
+"""Public model API: specs, abstract inputs per (arch x shape) cell, and
+step builders used by the launcher, dry-run, and tests."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeCell
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def model_specs(cfg: ModelConfig):
+    return transformer.model_specs(cfg)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one shape cell (no allocation).
+
+    train (LM):    tokens [B, S+1]  (loss predicts S positions)
+    train (enc):   frames [B, S, d], targets [B, S], mask [B, S]
+    prefill:       tokens [B, S]
+    decode:        tokens [B, 1]   (+ caches, built by ``cache_specs``)
+    """
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encoder":
+        if cell.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+            }
+        if cell.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        raise ValueError("encoder-only arch has no decode inputs")
+    if cell.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if cell.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def concrete_inputs(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> dict[str, Array]:
+    """Small real inputs matching ``input_specs`` (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, cell)
+    out: dict[str, Array] = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if k in ("tokens", "targets") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        elif s.dtype == jnp.bool_:
+            out[k] = jnp.asarray(rng.random(s.shape) < 0.3)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape).astype(np.float32), dtype=s.dtype)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Abstract decode caches (ShapeDtypeStructs) via eval_shape."""
+    return jax.eval_shape(lambda: transformer.init_caches(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Step functions (pure; jit/pjit applied by callers)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, *, moe_groups: int = 1):
+    def f(params, batch):
+        return transformer.loss_fn(cfg, params, batch, moe_groups=moe_groups)
+
+    return f
+
+
+def make_forward_fn(cfg: ModelConfig, *, moe_groups: int = 1):
+    if cfg.family == "encoder":
+        def f(params, batch):
+            return transformer.forward_encoder(cfg, params, batch["frames"])
+    else:
+        def f(params, batch):
+            logits, _, _ = transformer.forward_lm(cfg, params, batch["tokens"], moe_groups=moe_groups)
+            return logits
+
+    return f
+
+
+def make_prefill_fn(cfg: ModelConfig, *, moe_groups: int = 1):
+    """Prefill: run the full prompt and return (last-token logits, caches)."""
+    if cfg.family == "encoder":
+        def f(params, batch):
+            return transformer.forward_encoder(cfg, params, batch["frames"]), None
+    else:
+        def f(params, caches, batch):
+            logits, new_caches, _ = transformer.forward_lm(
+                cfg, params, batch["tokens"], caches=caches, moe_groups=moe_groups
+            )
+            return logits[:, -1:], new_caches
+
+    return f
+
+
+def make_decode_fn(cfg: ModelConfig, *, moe_groups: int = 1):
+    def f(params, caches, batch):
+        return transformer.decode_step(cfg, params, caches, batch["tokens"], moe_groups=moe_groups)
+
+    return f

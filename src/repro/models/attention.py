@@ -1,0 +1,403 @@
+"""Grouped-query attention with a memory-sane chunked-flash implementation.
+
+The default path is the flash algorithm expressed in jnp (lax.scan over KV
+blocks with an online softmax) so that lowering never materializes the
+[S, S] score matrix -- this is what makes the 32k-prefill dry-run cells fit.
+``use_pallas=True`` swaps the hot loop for the Pallas TPU kernel in
+``repro.kernels.flash_attention`` (same math, MXU-tiled).
+
+GQA is computed in grouped form [B, Hkv, G, S, D] so K/V are never expanded
+to the full head count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    ParamSpec,
+    apply_rope,
+    linear,
+    linear_spec,
+    rmsnorm_1d,
+)
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+    norm_eps: float = 1e-5
+    k_block: int = 512  # flash kv-block size (jnp path)
+    # perf: flat-head layout -- q/k/v as [B, H, S, D] with H sharded evenly
+    # over 'model' (KV broadcast-expanded to H).  The grouped layout shards
+    # tiny Hkv/G dims (heavy GSPMD padding + score all-gathers); flat is the
+    # beyond-paper optimized path.  See EXPERIMENTS.md §Perf.
+    flat: bool = False
+
+
+def attention_specs(cfg: AttentionConfig) -> dict:
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "q": linear_spec(cfg.d_model, H * D, ("embed", "heads"), bias=cfg.qkv_bias),
+        "k": linear_spec(cfg.d_model, Hkv * D, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "v": linear_spec(cfg.d_model, Hkv * D, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "o": linear_spec(H * D, cfg.d_model, ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((D,), (None,), "ones")
+        specs["k_norm"] = ParamSpec((D,), (None,), "ones")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# chunked flash (jnp): scan over KV blocks with online softmax
+# ---------------------------------------------------------------------------
+
+def flash_attention_jnp(
+    q: Array,                   # [B, Hkv, G, Sq, D]
+    k: Array,                   # [B, Hkv, Skv, D]
+    v: Array,                   # [B, Hkv, Skv, D]
+    *,
+    q_positions: Array,         # [Sq]
+    kv_positions: Array,        # [Skv]
+    causal: bool,
+    k_block: int,
+) -> Array:
+    B, Hkv, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    scale = 1.0 / (D**0.5)
+    k_block = min(k_block, Skv)
+    if Skv % k_block != 0:
+        # pad kv to a block multiple; padded keys are masked out by position
+        pad = k_block - Skv % k_block
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=2**30)
+        Skv += pad
+    nblk = Skv // k_block
+
+    qf = q.astype(jnp.float32) * scale
+    ks = jnp.moveaxis(k.reshape(B, Hkv, nblk, k_block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, Hkv, nblk, k_block, D), 2, 0)
+    kpos = kv_positions.reshape(nblk, k_block)
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, kp = blk
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qf, kb.astype(jnp.float32))
+        if causal:
+            valid = kp[None, :] <= q_positions[:, None]
+        else:
+            valid = (kp < 2**30)[None, :] & jnp.ones((Sq, 1), bool)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bhtd->bhgsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, kpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out
+
+
+def flash_attention_flat(
+    q: Array,                   # [B, H, Sq, D]
+    k: Array,                   # [B, H, Skv, D]  (already group-expanded)
+    v: Array,                   # [B, H, Skv, D]
+    *,
+    q_positions: Array,
+    kv_positions: Array,
+    causal: bool,
+    k_block: int,
+) -> Array:
+    """Flat-head flash: every tensor carries the full head dim H, which is
+    sharded evenly over 'model' -- scores stay rank-local under TP."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    scale = 1.0 / (D**0.5)
+    k_block = min(k_block, Skv)
+    if Skv % k_block != 0:
+        pad = k_block - Skv % k_block
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=2**30)
+        Skv += pad
+    nblk = Skv // k_block
+
+    qf = q.astype(jnp.float32) * scale
+    ks = jnp.moveaxis(k.reshape(B, H, nblk, k_block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, H, nblk, k_block, D), 2, 0)
+    kpos = kv_positions.reshape(nblk, k_block)
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, kp = blk
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kb.astype(jnp.float32))
+        if causal:
+            valid = kp[None, :] <= q_positions[:, None]
+        else:
+            valid = (kp < 2**30)[None, :] & jnp.ones((Sq, 1), bool)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, kpos))
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# flat flash with custom VJP: backward recomputes scores blockwise instead of
+# saving per-step probabilities/masks (the flash-attention backward).  This
+# removes the O(S * k_block * nblk) fp32 residuals the autodiff scan saves.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_flat_cvjp(q, k, v, causal: bool, k_block: int):
+    out, _ = _flash_flat_fwd_impl(q, k, v, causal, k_block)
+    return out
+
+
+def _flash_flat_fwd_impl(q, k, v, causal, k_block):
+    B, H, S, D = q.shape
+    pos = jnp.arange(S)
+    out, (m, l) = _flash_flat_stats(q, k, v, causal=causal, k_block=k_block)
+    return out, (m, l)
+
+
+def _flash_flat_stats(q, k, v, *, causal, k_block):
+    B, H, S, D = q.shape
+    scale = 1.0 / (D**0.5)
+    nblk = S // k_block
+    qf = q.astype(jnp.float32) * scale
+    ks = jnp.moveaxis(k.reshape(B, H, nblk, k_block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, H, nblk, k_block, D), 2, 0)
+    kpos = jnp.arange(S).reshape(nblk, k_block)
+    qpos = jnp.arange(S)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, kp = blk
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kb.astype(jnp.float32))
+        if causal:
+            s = jnp.where((kp[None, :] <= qpos[:, None])[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        return (
+            m_new,
+            l * alpha + p.sum(-1),
+            acc * alpha[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, vb.astype(jnp.float32)),
+        ), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, kpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, (m, l)
+
+
+def _flash_flat_cvjp_fwd(q, k, v, causal, k_block):
+    out, (m, l) = _flash_flat_fwd_impl(q, k, v, causal, k_block)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_flat_cvjp_bwd(causal, k_block, res, dout):
+    q, k, v, out, m, l = res
+    B, H, S, D = q.shape
+    scale = 1.0 / (D**0.5)
+    nblk = S // k_block
+    qf = q.astype(jnp.float32)
+    dout = dout.astype(jnp.float32)
+    # Di = sum_d dout * out  (the softmax jacobian diagonal term)
+    Dvec = jnp.sum(dout * out.astype(jnp.float32), axis=-1)          # [B,H,S]
+    lsafe = jnp.maximum(l, 1e-30)
+    ks = jnp.moveaxis(k.reshape(B, H, nblk, k_block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, H, nblk, k_block, D), 2, 0)
+    kpos = jnp.arange(S).reshape(nblk, k_block)
+    qpos = jnp.arange(S)
+
+    def step(dq_acc, blk):
+        kb, vb, kp = blk
+        s = jnp.einsum("bhsd,bhtd->bhst", qf * scale, kb.astype(jnp.float32))
+        if causal:
+            s = jnp.where((kp[None, :] <= qpos[:, None])[None, None], s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) / lsafe[..., None]             # [B,H,S,t]
+        dp = jnp.einsum("bhsd,bhtd->bhst", dout, vb.astype(jnp.float32))
+        ds = p * (dp - Dvec[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhst,bhtd->bhsd", ds, kb.astype(jnp.float32))
+        dkb = jnp.einsum("bhst,bhsd->bhtd", ds, qf)
+        dvb = jnp.einsum("bhst,bhsd->bhtd", p, dout)
+        return dq_acc, (dkb, dvb)
+
+    dq0 = jnp.zeros((B, H, S, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (ks, vs, kpos))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, H, S, D)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, H, S, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_flat_cvjp.defvjp(_flash_flat_cvjp_fwd, _flash_flat_cvjp_bwd)
+
+
+def _reference_attention(q, k, v, *, q_positions, kv_positions, causal):
+    """Naive masked attention (oracle for tests; materializes scores)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = kv_positions[None, :] <= q_positions[:, None]
+    else:
+        mask = jnp.ones((q.shape[3], k.shape[2]), bool)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# full module: projections + rope + flash + output
+# ---------------------------------------------------------------------------
+
+def attention_apply(
+    params: dict,
+    x: Array,                       # [B, S, d_model]
+    cfg: AttentionConfig,
+    *,
+    positions: Array | None = None, # [S] absolute positions
+    cache: dict | None = None,      # decode: {"k","v": [B,Hkv,T,D], "length": []}
+    use_pallas: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[Array, dict | None]:
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // Hkv
+    if positions is None:
+        positions = jnp.arange(S)
+        if cache is not None:
+            positions = positions + cache["length"]
+
+    q = linear(params["q"], x, compute_dtype=compute_dtype).reshape(B, S, H, D)
+    k = linear(params["k"], x, compute_dtype=compute_dtype).reshape(B, S, Hkv, D)
+    v = linear(params["v"], x, compute_dtype=compute_dtype).reshape(B, S, Hkv, D)
+
+    if cfg.qk_norm:
+        q = rmsnorm_1d(params["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm_1d(params["k_norm"], k, eps=cfg.norm_eps)
+    if cfg.rope:
+        q = apply_rope(q, positions[None, :, None], theta=cfg.rope_theta)
+        k = apply_rope(k, positions[None, :, None], theta=cfg.rope_theta)
+
+    kh = k.transpose(0, 2, 1, 3)        # [B, Hkv, S, D] (cache layout)
+    vh = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        start = cache["length"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], kh.astype(cache["k"].dtype), (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vh.astype(cache["v"].dtype), (0, 0, start, 0))
+        ck = constrain(ck, ("batch", "kv_heads", "kv_seq", None))
+        cv = constrain(cv, ("batch", "kv_heads", "kv_seq", None))
+        new_cache = {"k": ck, "v": cv, "length": cache["length"] + S}
+
+    if cache is not None and S == 1:
+        # token decode: grouped attention against the full cache
+        qg = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+        qg = constrain(qg, ("batch", "kv_heads", "heads_inner", None, None))
+        out = _decode_attention(
+            qg, ck, cv,
+            q_positions=positions, kv_positions=jnp.arange(cache["k"].shape[2]),
+        )
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * D).astype(compute_dtype)
+    elif cfg.flat:
+        # flat-head layout: H sharded evenly over 'model'; KV group-expanded
+        # (broadcast -- each rank materializes only its own head slice)
+        qt = constrain(q.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
+        kt = constrain(jnp.repeat(kh, G, axis=1), ("batch", "heads", None, None))
+        vt = constrain(jnp.repeat(vh, G, axis=1), ("batch", "heads", None, None))
+        kb = min(cfg.k_block, S)
+        if use_pallas:
+            from repro.kernels.flash_attention import ops as fa_ops
+
+            out = fa_ops.flash_attention(qt, kt, vt, causal=cfg.causal)
+        elif S % kb == 0:
+            # custom-VJP flash: backward recomputes scores blockwise
+            out = flash_flat_cvjp(qt, kt, vt, cfg.causal, kb)
+        else:
+            out = flash_attention_flat(
+                qt, kt, vt,
+                q_positions=positions, kv_positions=positions,
+                causal=cfg.causal, k_block=cfg.k_block,
+            )
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, H * D).astype(compute_dtype)
+    else:
+        # grouped (paper-faithful baseline) flash
+        qg = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+        qg = constrain(qg, ("batch", "kv_heads", "heads_inner", None, None))
+        kg = constrain(kh, ("batch", "kv_heads", None, None))
+        vg = constrain(vh, ("batch", "kv_heads", None, None))
+        if use_pallas:
+            from repro.kernels.flash_attention import ops as fa_ops
+
+            out = fa_ops.flash_attention(qg, kg, vg, causal=cfg.causal)
+        else:
+            out = flash_attention_jnp(
+                qg, kg, vg,
+                q_positions=positions, kv_positions=positions,
+                causal=cfg.causal, k_block=cfg.k_block,
+            )
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * D).astype(compute_dtype)
+
+    out = constrain(out, ("batch", None, "heads"))
+    return linear(params["o"], out, compute_dtype=compute_dtype), new_cache
+
+
+def _decode_attention(q, k, v, *, q_positions, kv_positions):
+    """Single/few-token attention against a (possibly longer) cache."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = kv_positions[None, :] <= q_positions[:, None]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+
+
+def init_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }

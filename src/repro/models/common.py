@@ -1,0 +1,243 @@
+"""Pure-JAX module substrate (no flax): parameter-spec trees, initializers,
+logical-axis sharding metadata, and basic layers.
+
+A model is described by a nested dict of ``ParamSpec`` leaves.  From that one
+tree we derive, without ever materializing parameters:
+  * ``init_params``      -- real parameter values (smoke tests / training)
+  * ``abstract_params``  -- ShapeDtypeStruct stand-ins (multi-pod dry-run)
+  * ``logical_axes``     -- per-dimension logical axis names, mapped to mesh
+                            axes by ``distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+# Logical axis vocabulary.  distributed/sharding.py maps these to mesh axes.
+#   "batch"   -> (pod, data)        "vocab"   -> model
+#   "heads"   -> model              "kv_heads"-> model (if wide enough)
+#   "ff"      -> model              "embed"   -> None (replicated)
+#   "experts" -> model              "layers"  -> None (scan axis)
+#   "seq"/"kv_seq" -> None (or data for long-context decode)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | conv
+    scale: float | None = None    # stddev override for "normal"
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # weight layout convention: last dim is output features
+    return int(math.prod(shape[:-1])) if len(shape) > 1 else int(shape[0])
+
+
+def _init_leaf(spec: ParamSpec, key: Array) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    scale = spec.scale
+    if scale is None:
+        scale = 1.0 if spec.init == "embed" else (1.0 / math.sqrt(max(_fan_in(spec.shape), 1)))
+    return (scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: PyTree, key: Array) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs: PyTree, sharding_fn: Callable[[ParamSpec], Any] | None = None) -> PyTree:
+    """ShapeDtypeStruct tree for .lower() -- no allocation.
+
+    ``sharding_fn(spec) -> Sharding | None`` attaches shardings for the
+    dry-run.
+    """
+
+    def leaf(s: ParamSpec):
+        sh = sharding_fn(s) if sharding_fn else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return jax.tree.map(leaf, specs, is_leaf=_is_spec)
+
+
+def logical_axes(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs: PyTree) -> int:
+    return sum(
+        int(math.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec)
+    )
+
+
+def stack_specs(specs: PyTree, num: int, axis_name: str = "layers") -> PyTree:
+    """Prepend a stacked (scan) dimension to every leaf."""
+    return jax.tree.map(
+        lambda s: ParamSpec((num, *s.shape), (axis_name, *s.axes), s.init, s.scale, s.dtype),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Basic layers (functional; params are dicts produced from spec trees)
+# ---------------------------------------------------------------------------
+
+def linear_spec(
+    d_in: int, d_out: int, axes: tuple[str | None, str | None], *, bias: bool = False,
+    bias_axis: str | None = None, scale: float | None = None,
+) -> dict:
+    out = {"w": ParamSpec((d_in, d_out), axes, "normal", scale)}
+    if bias:
+        out["b"] = ParamSpec((d_out,), (bias_axis if bias_axis is not None else axes[1],), "zeros")
+    return out
+
+
+def linear(params: dict, x: Array, *, compute_dtype=jnp.bfloat16) -> Array:
+    w = params["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_spec(d: int, axis: str | None = "embed") -> dict:
+    return {"scale": ParamSpec((d,), (axis,), "ones")}
+
+
+def rmsnorm(params: dict, x: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_spec(d: int, axis: str | None = "embed") -> dict:
+    return {"scale": ParamSpec((d,), (axis,), "ones"), "bias": ParamSpec((d,), (axis,), "zeros")}
+
+
+def layernorm(params: dict, x: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = x32.var(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_1d(scale: Array, x: Array, *, eps: float = 1e-5) -> Array:
+    """RMS norm over the last dim with an explicit scale vector (qk-norm)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def embedding_spec(vocab: int, d: int, *, scale: float = 0.02) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "embed", scale)}
+
+
+def embed(params: dict, ids: Array, *, compute_dtype=jnp.bfloat16) -> Array:
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def unembed_logits(params: dict, x: Array, *, compute_dtype=jnp.bfloat16) -> Array:
+    """x [.., d] @ table.T -> logits [.., vocab] (vocab stays sharded)."""
+    table = params["table"].astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), table)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """x: [..., seq, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs     # [..., seq, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: Array, labels: Array, *, mask: Array | None = None) -> Array:
+    """Mean CE over (optionally masked) positions.  fp32 reduction."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def seq_chunked_cross_entropy(
+    h: Array,            # [B, S, d] final hidden states
+    table: Array,        # [V, d] unembedding table (vocab may be TP-sharded)
+    labels: Array,       # [B, S]
+    *,
+    chunks: int,
+    compute_dtype=jnp.bfloat16,
+) -> Array:
+    """CE without materializing the full fp32 [B, S, V] logits: the sequence
+    is processed in ``chunks`` slices under remat, so peak logits memory
+    drops by ``chunks``x while the vocab TP split is preserved (the
+    logsumexp/gather over the sharded vocab dim reduce to small
+    all-reduces).  Beyond-paper perf path; see EXPERIMENTS.md §Perf."""
+    B, S, d = h.shape
+    if S % chunks:
+        return softmax_cross_entropy(
+            jnp.einsum("bsd,vd->bsv", h.astype(compute_dtype), table.astype(compute_dtype)),
+            labels,
+        )
+    Sc = S // chunks
+    hs = jnp.moveaxis(h.reshape(B, chunks, Sc, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, chunks, Sc), 1, 0)
+
+    @jax.checkpoint
+    def body(total, xs):
+        hc, lc = xs
+        logits = jnp.einsum(
+            "bsd,vd->bsv", hc.astype(compute_dtype), table.astype(compute_dtype)
+        ).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return total + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen/granite family) and GELU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import linear, linear_spec
+
+Array = jax.Array
+
+
+def swiglu_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "gate": linear_spec(d_model, d_ff, ("embed", "ff")),
+        "up": linear_spec(d_model, d_ff, ("embed", "ff")),
+        "down": linear_spec(d_ff, d_model, ("ff", "embed")),
+    }
+
+
+def swiglu_apply(params: dict, x: Array, *, compute_dtype=jnp.bfloat16) -> Array:
+    g = linear(params["gate"], x, compute_dtype=compute_dtype)
+    u = linear(params["up"], x, compute_dtype=compute_dtype)
+    h = constrain(jax.nn.silu(g) * u, ("batch", None, "ff"))
+    return linear(params["down"], h, compute_dtype=compute_dtype)
+
+
+def gelu_mlp_specs(d_model: int, d_ff: int, *, bias: bool = True) -> dict:
+    return {
+        "fc1": linear_spec(d_model, d_ff, ("embed", "ff"), bias=bias),
+        "fc2": linear_spec(d_ff, d_model, ("ff", "embed"), bias=bias, bias_axis="embed"),
+    }
+
+
+def gelu_mlp_apply(params: dict, x: Array, *, compute_dtype=jnp.bfloat16) -> Array:
+    h = jax.nn.gelu(linear(params["fc1"], x, compute_dtype=compute_dtype))
+    h = constrain(h, ("batch", None, "ff"))
+    return linear(params["fc2"], h, compute_dtype=compute_dtype)

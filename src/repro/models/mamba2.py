@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) layer in chunked matmul form.
+
+The selective state-space recurrence
+    h_t = exp(dA_t) * h_{t-1} + B_t (dt_t x_t)^T,      y_t = C_t . h_t + D x_t
+is computed chunk-parallel (Dao & Gu, 2024): intra-chunk contributions are a
+masked [Q, Q] matmul (MXU work), inter-chunk state is a short ``lax.scan``
+over L/Q chunks.  All pairwise decay factors are exp of *non-positive*
+numbers, so the chunked form is numerically safe at any chunk size.
+
+Projections are kept un-fused (separate z/x/B/C/dt weights) so each gets a
+clean logical sharding axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamSpec, linear, linear_spec, rmsnorm_1d
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64          # N
+    head_dim: int = 64         # P
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+    norm_eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_specs(cfg: Mamba2Config) -> dict:
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.num_heads
+    return {
+        "z": linear_spec(cfg.d_model, di, ("embed", "heads")),
+        "x": linear_spec(cfg.d_model, di, ("embed", "heads")),
+        "B": linear_spec(cfg.d_model, N, ("embed", None)),
+        "C": linear_spec(cfg.d_model, N, ("embed", None)),
+        "dt": linear_spec(cfg.d_model, H, ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), "zeros"),
+        "A_log": ParamSpec((H,), ("heads",), "normal", 0.5),
+        "D": ParamSpec((H,), ("heads",), "ones"),
+        "conv": ParamSpec((cfg.conv_kernel, di + 2 * N), (None, "heads"), "normal", 0.5),
+        "norm": ParamSpec((di,), ("heads",), "ones"),
+        "out": linear_spec(di, cfg.d_model, ("heads", "embed")),
+    }
+
+
+def _causal_conv(xbc: Array, kernel: Array, state: Array | None) -> tuple[Array, Array]:
+    """Depthwise causal conv over [B, L, Ch]; returns (out, new_state)."""
+    Kw = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], Kw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    new_state = xp[:, -(Kw - 1):, :]
+    out = jnp.zeros_like(xbc)
+    for i in range(Kw):
+        out = out + xp[:, i : i + xbc.shape[1], :] * kernel[i][None, None, :]
+    return out, new_state
+
+
+def ssd_chunked(
+    xbar: Array,      # [B, L, H, P]  (dt-scaled inputs)
+    dA: Array,        # [B, L, H]     log-decay per step (<= 0)
+    Bm: Array,        # [B, L, N]
+    Cm: Array,        # [B, L, N]
+    *,
+    chunk: int,
+    h0: Array | None = None,   # [B, H, P, N] initial state
+) -> tuple[Array, Array]:
+    """Returns (y [B, L, H, P], h_final [B, H, P, N])."""
+    B, L, H, P = xbar.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    orig_L = L
+    if L % Q != 0:
+        # pad with zero inputs and zero log-decay: padded steps leave the
+        # state untouched (decay exp(0)=1, no input), outputs are sliced off
+        pad = Q - L % Q
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        L += pad
+    nc = L // Q
+
+    x_ = xbar.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dA_ = dA.reshape(B, nc, Q, H).astype(jnp.float32)
+    B_ = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_ = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(dA_, axis=2)                      # [B, nc, Q, H]
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) for j <= i
+    CB = jnp.einsum("bcqn,bckn->bcqk", C_, B_)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [B,nc,Q,K,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, M, x_)
+
+    # per-chunk state contribution: sum_j exp(cum_end - cum_j) B_j xbar_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,nc,Q,H]
+    S_c = jnp.einsum("bckn,bckh,bckhp->bchpn", B_, decay_to_end, x_)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        s_c, g = inp                                            # [B,H,P,N], [B,H]
+        h_start = h
+        h_next = h * g[:, :, None, None] + s_c
+        return h_next, h_start
+
+    h_final, h_starts = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                     # [B,nc,H,P,N]
+
+    # inter-chunk output: C_i . (exp(cum_i) * h_start)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", C_, h_starts, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y[:, :orig_L], h_final
+
+
+def ssd_reference(xbar, dA, Bm, Cm, *, h0=None):
+    """Step-by-step recurrence oracle."""
+    B, L, H, P = xbar.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        x_t, a_t, b_t, c_t = t
+        h = h * jnp.exp(a_t)[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", x_t, b_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xbar.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dA.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba2_apply(
+    params: dict,
+    x: Array,                  # [B, L, d_model]
+    cfg: Mamba2Config,
+    *,
+    state: dict | None = None,  # decode: {"conv": [B,K-1,Ch], "ssm": [B,H,P,N]}
+    use_pallas: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[Array, dict | None]:
+    B, L, _ = x.shape
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.d_state
+
+    z = linear(params["z"], x, compute_dtype=compute_dtype)
+    xi = linear(params["x"], x, compute_dtype=compute_dtype)
+    Bm = linear(params["B"], x, compute_dtype=compute_dtype)
+    Cm = linear(params["C"], x, compute_dtype=compute_dtype)
+    dt = jax.nn.softplus(
+        linear(params["dt"], x, compute_dtype=jnp.float32).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                            # [B, L, H]
+
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv"].astype(compute_dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))            # [H], < 0
+    dA = dt * a[None, None, :]                                   # [B, L, H] <= 0
+    xh = xi.reshape(B, L, H, P).astype(jnp.float32)
+    xh = constrain(xh, ("batch", None, "heads", None))
+    xbar = xh * dt[..., None]
+
+    h0 = state["ssm"] if state is not None else None
+    if state is not None and L == 1:
+        # decode: single recurrence step
+        y, h_final = ssd_reference(xbar, dA, Bm, Cm, h0=h0)
+    elif use_pallas:
+        from repro.kernels.mamba2_ssd import ops as ssd_ops
+
+        y, h_final = ssd_ops.ssd(xbar, dA, Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk=cfg.chunk)
+    else:
+        y, h_final = ssd_chunked(xbar, dA, Bm, Cm, chunk=cfg.chunk, h0=h0)
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, L, cfg.d_inner).astype(compute_dtype)
+    y = rmsnorm_1d(params["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = linear(params["out"], y, compute_dtype=compute_dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_final}
+    return out, new_state
+
+
+def init_mamba_state(cfg: Mamba2Config, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+    }

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts layer with top-k routing and capacity-bounded,
+sort-free local dispatch.
+
+Tokens are viewed as ``[G, T_local, d]`` where ``G`` (``moe_groups``) matches
+the data-parallel axis size at launch time.  Dispatch is *local to a group*:
+each group scatters its tokens into a per-group expert buffer
+``[G, E, C, d]`` (G -> data, E -> model), so the only cross-device traffic is
+the combine reduction over the model axis -- the pattern EP hardware wants.
+Capacity is per-group: ``C = ceil(T_local * k / E * capacity_factor)``;
+overflow tokens are dropped (their combine weight is zero), as in
+Switch/GShard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamSpec, linear_spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # perf: compute capacity positions via a stable argsort over assignments
+    # instead of the one-hot running count (removes the [T*k, E] int tensor
+    # and its cumsum -- the dominant MoE memory term).  Same semantics:
+    # first-come-first-served within each expert.
+    sort_dispatch: bool = False
+
+
+def moe_specs(cfg: MoEConfig) -> dict:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    # experts carry the TP split; the per-expert hidden dim stays local
+    # ("expert_ff" -> replicated) so no tensor maps 'model' twice.
+    return {
+        "router": linear_spec(d, E, ("embed", "experts")),
+        "gate": ParamSpec((E, d, f), ("experts", "embed", "expert_ff"), "normal", 1.0 / math.sqrt(d)),
+        "up": ParamSpec((E, d, f), ("experts", "embed", "expert_ff"), "normal", 1.0 / math.sqrt(d)),
+        "down": ParamSpec((E, f, d), ("experts", "expert_ff", "embed"), "normal", 1.0 / math.sqrt(f)),
+    }
+
+
+def _sorted_positions(flat_e: Array, num_experts: int) -> Array:
+    """Position of each assignment within its expert (first-come order),
+    via one stable argsort per group -- O(A log A) memory-light replacement
+    for the one-hot cumsum."""
+
+    def per_group(e: Array) -> Array:
+        A = e.shape[0]
+        order = jnp.argsort(e, stable=True)                     # [A]
+        sorted_e = e[order]
+        counts = jnp.zeros((num_experts,), jnp.int32).at[e].add(1)
+        starts = jnp.cumsum(counts) - counts                    # [E]
+        ranks = jnp.arange(A, dtype=jnp.int32) - starts[sorted_e]
+        return jnp.zeros((A,), jnp.int32).at[order].set(ranks)
+
+    return jax.vmap(per_group)(flat_e)
+
+
+def moe_capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    return max(
+        1,
+        int(math.ceil(tokens_per_group * cfg.top_k / cfg.num_experts * cfg.capacity_factor)),
+    )
+
+
+def moe_apply(
+    params: dict,
+    x: Array,                    # [B, S, d]
+    cfg: MoEConfig,
+    *,
+    moe_groups: int = 1,
+    dropless: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[Array, Array]:
+    """Returns (output [B, S, d], aux_loss scalar).
+
+    ``dropless=True`` (decode path) sizes capacity so no assignment can
+    overflow (C = tokens-per-group), guaranteeing serve-time exactness.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    G = moe_groups
+    T = B * S
+    if T % G != 0:
+        raise ValueError(f"tokens {T} not divisible by moe_groups {G}")
+    Tg = T // G
+    C = Tg if dropless else moe_capacity(Tg, cfg)
+
+    xt = constrain(x.reshape(G, Tg, d), ("moe_group", None, "embed"))
+
+    # ---- routing (fp32 for numerics) ------------------------------------
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), params["router"]["w"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)              # [G, Tg, E]
+    top_probs, top_idx = jax.lax.top_k(probs, k)                # [G, Tg, k]
+    top_w = top_probs / jnp.maximum(top_probs.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch) --------------------------
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=(1, 2)
+    )                                                           # [G, E] mean over Tg,k
+    prob_frac = probs.mean(axis=1)                              # [G, E]
+    aux = cfg.router_aux_weight * E * jnp.mean(
+        jnp.sum(dispatch_frac * prob_frac, axis=-1)
+    )
+
+    # ---- capacity positions ------------------------------------------------
+    flat_e = top_idx.reshape(G, Tg * k)
+    if cfg.sort_dispatch:
+        pos = _sorted_positions(flat_e, E)
+    else:
+        # baseline: running count via one-hot cumsum [G, Tg*k, E]
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+        pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C
+    w_flat = top_w.reshape(G, Tg * k) * keep.astype(jnp.float32)
+
+    # ---- dispatch: tokens -> [G, E, C, d] ----------------------------------
+    token_of_assign = jnp.tile(jnp.arange(Tg)[:, None], (1, k)).reshape(Tg * k)
+    clipped_pos = jnp.minimum(pos, C - 1)
+
+    if cfg.sort_dispatch:
+        # slot-gather: scatter token *ids* into [E, C] (2 ints per slot),
+        # then one gather builds the buffer -- never materializes the
+        # [Tg*k, d] per-assignment activations (the dominant MoE buffer).
+        def dispatch_group(xg, e_g, p_g, keep_g):
+            slot_token = jnp.full((E, C), Tg, jnp.int32)         # Tg = padding row
+            # dropped assignments get an out-of-range expert id so the
+            # scatter discards them instead of clobbering slot (e, C-1)
+            e_safe = jnp.where(keep_g, e_g, E).astype(jnp.int32)
+            slot_token = slot_token.at[e_safe, p_g].set(
+                token_of_assign.astype(jnp.int32), mode="drop"
+            )
+            xg_pad = jnp.concatenate(
+                [xg.astype(compute_dtype), jnp.zeros((1, d), compute_dtype)], axis=0
+            )
+            return xg_pad[slot_token]                            # [E, C, d]
+
+        buf = jax.vmap(dispatch_group)(xt, flat_e, clipped_pos, keep)
+    else:
+        # baseline: gather per-assignment activations then scatter-add
+        def scatter_group(buf_g, xg, e_g, p_g, keep_g):
+            src = xg[token_of_assign].astype(compute_dtype)
+            src = src * keep_g[:, None].astype(compute_dtype)
+            return buf_g.at[e_g, p_g].add(src, mode="drop")
+
+        buf = jax.vmap(scatter_group)(
+            jnp.zeros((G, E, C, d), compute_dtype), xt, flat_e, clipped_pos, keep
+        )
+    buf = constrain(buf, ("moe_group", "experts", None, "embed"))
+
+    # ---- expert computation (stacked einsum over E) ------------------------
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, params["gate"].astype(compute_dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", buf, params["up"].astype(compute_dtype))
+    h = constrain(jax.nn.silu(h_gate) * h_up, ("moe_group", "experts", None, "expert_ff"))
+    y = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(compute_dtype))
+    y = constrain(y, ("moe_group", "experts", None, "embed"))
+
+    # ---- combine: gather back and weight -----------------------------------
+    def gather_group(y_g, e_g, p_g, w_g):
+        vals = y_g[e_g, p_g]                                    # [Tg*k, d]
+        vals = vals * w_g[:, None].astype(vals.dtype)
+        return jnp.zeros((Tg, d), vals.dtype).at[token_of_assign].add(vals)
+
+    out = jax.vmap(gather_group)(y, flat_e, clipped_pos, w_flat)
+    out = constrain(out, ("moe_group", None, "embed"))
+    return out.reshape(B, S, d).astype(compute_dtype), aux
+
+
+def moe_ref(params: dict, x: Array, cfg: MoEConfig) -> Array:
+    """Dense oracle: every token through its top-k experts, no capacity.
+
+    O(T*k) gathers -- fine for tests, used to validate the dispatch path
+    (tokens under capacity must match exactly).
+    """
+    B, S, d = x.shape
+    xt = x.reshape(-1, d).astype(jnp.float32)
+    logits = xt @ params["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_probs, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_probs / jnp.maximum(top_probs.sum(-1, keepdims=True), 1e-9)
+
+    def per_token(xi, ei, wi):
+        def per_expert(e, w):
+            g = xi @ params["gate"][e].astype(jnp.float32)
+            u = xi @ params["up"][e].astype(jnp.float32)
+            return w * ((jax.nn.silu(g) * u) @ params["down"][e].astype(jnp.float32))
+
+        return jax.vmap(per_expert)(ei, wi).sum(0)
+
+    out = jax.vmap(per_token)(xt, top_idx, top_w)
+    return out.reshape(B, S, d)

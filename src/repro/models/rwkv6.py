@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") layer: data-dependent-decay linear attention.
+
+Time-mix recurrence (per head, key-dim C, value-dim V):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x))) in (0, 1), data
+dependent.  The jnp path runs the exact recurrence as one ``lax.scan`` over
+time (simple, numerically exact); the Pallas kernel
+(``repro.kernels.rwkv6_wkv``) is the chunked VMEM-resident version.
+
+Token-shift mixing uses the paper's ddlerp (low-rank data-dependent lerp).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamSpec, linear, linear_spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_rank: int = 32
+    norm_eps: float = 1e-5
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_timemix_specs(cfg: RWKV6Config) -> dict:
+    d, r = cfg.d_model, cfg.lora_rank
+    specs = {
+        "mu_base": ParamSpec((5, d), (None, "embed"), "normal", 0.1),
+        "lora_a": ParamSpec((d, r), ("embed", None), "normal"),
+        "lora_b": ParamSpec((5, r, d), (None, None, "embed"), "zeros"),
+        "w0": ParamSpec((d,), ("embed",), "normal", 0.5),
+        "w_lora_a": ParamSpec((d, r), ("embed", None), "normal"),
+        "w_lora_b": ParamSpec((r, d), (None, "embed"), "zeros"),
+        "u": ParamSpec((d,), ("embed",), "normal", 0.5),
+        "r": linear_spec(d, d, ("embed", "heads")),
+        "k": linear_spec(d, d, ("embed", "heads")),
+        "v": linear_spec(d, d, ("embed", "heads")),
+        "g": linear_spec(d, d, ("embed", "heads")),
+        "o": linear_spec(d, d, ("heads", "embed")),
+        "ln_x": ParamSpec((d,), ("embed",), "ones"),
+    }
+    return specs
+
+
+def rwkv6_channelmix_specs(cfg: RWKV6Config) -> dict:
+    d = cfg.d_model
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "normal", 0.1),
+        "key": linear_spec(d, cfg.d_ff, ("embed", "ff")),
+        "value": linear_spec(cfg.d_ff, d, ("ff", "embed")),
+        "receptance": linear_spec(d, d, ("embed", "embed")),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x_{t-1} stream: shift right by one; ``prev`` carries across decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_scan(
+    r: Array, k: Array, v: Array, w: Array, u: Array, *, h0: Array | None = None
+) -> tuple[Array, Array]:
+    """Exact recurrence.  r/k/v/w: [B, L, H, C]; u: [H, C].
+
+    Returns (y [B, L, H, C], final state [B, H, C, C])
+    (state: key-dim x value-dim, head_dim == C == V).
+    """
+    B, L, H, C = r.shape
+    h = jnp.zeros((B, H, C, C), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        r_t, k_t, v_t, w_t = t                               # [B,H,C] each
+        kv = jnp.einsum("bhc,bhv->bhcv", k_t, v_t)           # outer product
+        y = jnp.einsum("bhcv,bhc->bhv", h + u[None, :, :, None] * kv, r_t)
+        h = h * w_t[..., None] + kv
+        return h, y
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w)
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def rwkv6_timemix_apply(
+    params: dict,
+    x: Array,                   # [B, L, d]
+    cfg: RWKV6Config,
+    *,
+    state: dict | None = None,  # {"shift": [B,1,d], "wkv": [B,H,C,C]}
+    use_pallas: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[Array, dict | None]:
+    B, L, d = x.shape
+    H, C = cfg.num_heads, cfg.head_dim
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    dx = xp - x
+
+    # ddlerp: xi = x + dx * (mu_i + lora_i(x + dx * mu_base_i))
+    inner = x[None] + dx[None] * params["mu_base"][:, None, None, :].astype(x.dtype)  # [5,B,L,d]
+    lora_h = jnp.tanh(jnp.einsum("nbld,dr->nblr", inner.astype(jnp.float32), params["lora_a"].astype(jnp.float32)))
+    lora = jnp.einsum("nblr,nrd->nbld", lora_h, params["lora_b"].astype(jnp.float32))
+    mixed = x[None].astype(jnp.float32) + dx[None].astype(jnp.float32) * (
+        params["mu_base"][:, None, None, :].astype(jnp.float32) + lora
+    )
+    xr, xk, xv, xw, xg = [mixed[i].astype(compute_dtype) for i in range(5)]
+
+    r = linear(params["r"], xr, compute_dtype=compute_dtype).reshape(B, L, H, C)
+    k = linear(params["k"], xk, compute_dtype=compute_dtype).reshape(B, L, H, C)
+    v = linear(params["v"], xv, compute_dtype=compute_dtype).reshape(B, L, H, C)
+    r = constrain(r, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    g = linear(params["g"], xg, compute_dtype=compute_dtype)
+
+    w_log = params["w0"].astype(jnp.float32) + jnp.einsum(
+        "bld,dr,re->ble",
+        xw.astype(jnp.float32),
+        params["w_lora_a"].astype(jnp.float32),
+        params["w_lora_b"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, L, H, C)         # decay in (0, 1)
+    u = params["u"].astype(jnp.float32).reshape(H, C)
+
+    h0 = state["wkv"] if state is not None else None
+    if use_pallas and state is None:
+        from repro.kernels.rwkv6_wkv import ops as wkv_ops
+
+        y, h_final = wkv_ops.wkv6(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, u
+        )
+    else:
+        y, h_final = wkv6_scan(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, u, h0=h0
+        )
+
+    y = y.reshape(B, L, d)
+    # group norm per head, then gate
+    y = y.reshape(B, L, H, C)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1)[..., None]
+    y = (y - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (y.reshape(B, L, d) * params["ln_x"].astype(jnp.float32)).astype(compute_dtype)
+    y = y * jax.nn.silu(g)
+    out = linear(params["o"], y, compute_dtype=compute_dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1:, :].astype(state["shift"].dtype), "wkv": h_final}
+    return out, new_state
+
+
+def rwkv6_channelmix_apply(
+    params: dict,
+    x: Array,
+    cfg: RWKV6Config,
+    *,
+    state: dict | None = None,  # {"shift": [B,1,d]}
+    compute_dtype=jnp.bfloat16,
+) -> tuple[Array, dict | None]:
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    mu = params["mu_k"].astype(x.dtype)
+    xk = x + (xp - x) * mu
+    k = linear(params["key"], xk, compute_dtype=compute_dtype)
+    kv = linear(params["value"], jnp.square(jax.nn.relu(k)), compute_dtype=compute_dtype)
+    rgate = jax.nn.sigmoid(linear(params["receptance"], xk, compute_dtype=compute_dtype))
+    out = rgate * kv
+    new_state = {"shift": x[:, -1:, :].astype(x.dtype)} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg: RWKV6Config, batch: int, dtype=jnp.bfloat16) -> dict:
+    H, C = cfg.num_heads, cfg.head_dim
+    return {
+        "time": {
+            "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, H, C, C), jnp.float32),
+        },
+        "channel": {"shift": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+    }

@@ -1,0 +1,482 @@
+"""Unified backbone: dense / MoE decoder LMs, zamba2-style hybrid,
+RWKV6 stack, and encoder-only (hubert) -- all scan-over-layers.
+
+Scan keeps HLO size (and compile time) independent of depth; layer params
+are stacked on a leading "layers" axis.  ``jax.checkpoint`` around the layer
+body implements activation rematerialization.  Train and decode take
+separate scan paths (decode threads per-layer caches through scan xs/ys).
+
+The zamba2 hybrid is structured in *rounds*: one shared attention block
+followed by ``attn_every`` mamba2 layers; the scan runs over full rounds and
+a small epilogue handles the remainder (81 = 13*6 + 3), so decode caches
+stay per-invocation (14 copies) instead of per-layer (81).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import ffn, mamba2, moe as moe_lib, rwkv6
+from repro.models.common import (
+    ParamSpec,
+    embed,
+    embedding_spec,
+    layernorm,
+    layernorm_spec,
+    linear,
+    linear_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    softmax_cross_entropy,
+    stack_specs,
+    unembed_logits,
+)
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Parameter specs
+# ===========================================================================
+
+def _dense_layer_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "norm1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attention_specs(cfg.attention_config()),
+        "norm2": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_lib.moe_specs(cfg.moe_config())
+    elif cfg.mlp_type == "gelu":
+        specs["mlp"] = ffn.gelu_mlp_specs(cfg.d_model, cfg.d_ff, bias=False)
+    else:
+        specs["mlp"] = ffn.swiglu_specs(cfg.d_model, cfg.d_ff)
+    return specs
+
+
+def _shared_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": linear_spec(2 * cfg.d_model, cfg.d_model, (None, "embed")),
+        "norm1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attention_specs(cfg.attention_config()),
+        "norm2": rmsnorm_spec(cfg.d_model),
+        "mlp": ffn.swiglu_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _mamba_layer_specs(cfg: ModelConfig) -> dict:
+    return {"norm": rmsnorm_spec(cfg.d_model), "mamba": mamba2.mamba2_specs(cfg.mamba_config())}
+
+
+def hybrid_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(full_rounds, layers_per_round, epilogue_mamba_layers)."""
+    period = max(cfg.attn_every, 1)
+    full = cfg.num_layers // period
+    rem = cfg.num_layers - full * period
+    return full, period, rem
+
+
+def _rwkv_layer_specs(cfg: ModelConfig) -> dict:
+    rcfg = cfg.rwkv_config()
+    return {
+        "ln1": layernorm_spec(cfg.d_model),
+        "time": rwkv6.rwkv6_timemix_specs(rcfg),
+        "ln2": layernorm_spec(cfg.d_model),
+        "channel": rwkv6.rwkv6_channelmix_specs(rcfg),
+    }
+
+
+def _encoder_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layernorm_spec(cfg.d_model),
+        "attn": attn.attention_specs(cfg.attention_config()),
+        "ln2": layernorm_spec(cfg.d_model),
+        "mlp": ffn.gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "moe"):
+        specs: dict[str, Any] = {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "layers": stack_specs(_dense_layer_specs(cfg), cfg.num_layers),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+    elif cfg.family == "hybrid":
+        full, period, rem = hybrid_layout(cfg)
+        layer = _mamba_layer_specs(cfg)
+        specs = {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "rounds": stack_specs(stack_specs(layer, period, "inner"), full, "layers"),
+            "shared": _shared_block_specs(cfg),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+        if rem:
+            specs["epilogue"] = stack_specs(layer, rem)
+    elif cfg.family == "rwkv":
+        specs = {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "ln_in": layernorm_spec(cfg.d_model),
+            "layers": stack_specs(_rwkv_layer_specs(cfg), cfg.num_layers),
+            "ln_out": layernorm_spec(cfg.d_model),
+        }
+    elif cfg.family == "encoder":
+        # modality frontend is a stub: inputs are precomputed frame embeddings
+        return {
+            "in_proj": linear_spec(cfg.d_model, cfg.d_model, ("embed", "embed"), bias=True),
+            "pos_conv": ParamSpec((128, cfg.d_model), (None, "embed"), "normal", 0.02),
+            "ln_in": layernorm_spec(cfg.d_model),
+            "layers": stack_specs(_encoder_layer_specs(cfg), cfg.num_layers),
+            "ln_out": layernorm_spec(cfg.d_model),
+            "head": linear_spec(cfg.d_model, cfg.vocab_size, ("embed", "vocab"), bias=True),
+        }
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    if not cfg.tie_embeddings:
+        specs["unembed"] = embedding_spec(cfg.vocab_size, cfg.d_model)
+    return specs
+
+
+# ===========================================================================
+# Layer bodies
+# ===========================================================================
+
+def _maybe_remat(fn, enable: bool):
+    return jax.checkpoint(fn) if enable else fn
+
+
+def _dense_layer(cfg, acfg, layer_params, h, positions, cache, *, moe_groups):
+    a_in = rmsnorm(layer_params["norm1"], h, eps=cfg.norm_eps)
+    a_out, new_cache = attn.attention_apply(
+        layer_params["attn"], a_in, acfg,
+        positions=positions, cache=cache, use_pallas=cfg.use_pallas,
+    )
+    h = h + a_out
+    f_in = rmsnorm(layer_params["norm2"], h, eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        f_out, aux = moe_lib.moe_apply(
+            layer_params["moe"], f_in, cfg.moe_config(), moe_groups=moe_groups,
+            dropless=cache is not None,
+        )
+    else:
+        if cfg.mlp_type == "gelu":
+            f_out = ffn.gelu_mlp_apply(layer_params["mlp"], f_in)
+        else:
+            f_out = ffn.swiglu_apply(layer_params["mlp"], f_in)
+        aux = jnp.zeros((), jnp.float32)
+    return h + f_out, new_cache, aux
+
+
+def _shared_block(cfg, acfg, params, h, x_emb, positions, cache):
+    """zamba2 shared transformer block on concat(embedding, hidden)."""
+    z = linear(params["in_proj"], jnp.concatenate([x_emb, h], axis=-1))
+    a_in = rmsnorm(params["norm1"], z, eps=cfg.norm_eps)
+    a_out, new_cache = attn.attention_apply(
+        params["attn"], a_in, acfg,
+        positions=positions, cache=cache, use_pallas=cfg.use_pallas,
+    )
+    z = z + a_out
+    f_in = rmsnorm(params["norm2"], z, eps=cfg.norm_eps)
+    z = z + ffn.swiglu_apply(params["mlp"], f_in)
+    return h + z, new_cache
+
+
+def _mamba_layer(cfg, mcfg, layer_params, h, state):
+    m_in = rmsnorm(layer_params["norm"], h, eps=cfg.norm_eps)
+    m_out, new_state = mamba2.mamba2_apply(
+        layer_params["mamba"], m_in, mcfg, state=state, use_pallas=cfg.use_pallas
+    )
+    return h + m_out, new_state
+
+
+def _rwkv_layer(cfg, rcfg, layer_params, h, state):
+    t_state = state["time"] if state is not None else None
+    c_state = state["channel"] if state is not None else None
+    t_in = layernorm(layer_params["ln1"], h, eps=cfg.norm_eps)
+    t_out, new_t = rwkv6.rwkv6_timemix_apply(
+        layer_params["time"], t_in, rcfg, state=t_state, use_pallas=cfg.use_pallas
+    )
+    h = h + t_out
+    c_in = layernorm(layer_params["ln2"], h, eps=cfg.norm_eps)
+    c_out, new_c = rwkv6.rwkv6_channelmix_apply(layer_params["channel"], c_in, rcfg, state=c_state)
+    h = h + c_out
+    new_state = None if state is None else {"time": new_t, "channel": new_c}
+    return h, new_state
+
+
+# ===========================================================================
+# Stacks (train path: no caches; decode path: caches through scan xs/ys)
+# ===========================================================================
+
+def _stack_dense(cfg, params, h, positions, caches, *, moe_groups):
+    acfg = cfg.attention_config()
+    if caches is None:
+        def body(h, layer_params):
+            h, _, aux = _dense_layer(cfg, acfg, layer_params, h, positions, None, moe_groups=moe_groups)
+            return h, aux
+        h, auxes = jax.lax.scan(_maybe_remat(body, cfg.remat), h, params["layers"])
+        return h, None, auxes.sum()
+
+    def body(h, xs):
+        layer_params, cache = xs
+        h, new_cache, aux = _dense_layer(cfg, acfg, layer_params, h, positions, cache, moe_groups=moe_groups)
+        return h, (new_cache, aux)
+
+    h, (new_caches, auxes) = jax.lax.scan(body, h, (params["layers"], caches))
+    return h, new_caches, auxes.sum()
+
+
+def _stack_hybrid(cfg, params, h, x_emb, positions, caches):
+    acfg, mcfg = cfg.attention_config(), cfg.mamba_config()
+    full, period, rem = hybrid_layout(cfg)
+    decode = caches is not None
+
+    def round_body_train(h, round_params):
+        h, _ = _shared_block(cfg, acfg, params["shared"], h, x_emb, positions, None)
+
+        def inner(h, lp):
+            h, _ = _mamba_layer(cfg, mcfg, lp, h, None)
+            return h, None
+
+        h, _ = jax.lax.scan(inner, h, round_params)
+        return h, None
+
+    def round_body_decode(h, xs):
+        round_params, attn_cache, mstates = xs
+        h, new_attn = _shared_block(cfg, acfg, params["shared"], h, x_emb, positions, attn_cache)
+
+        def inner(h, xs2):
+            lp, st = xs2
+            h, new_st = _mamba_layer(cfg, mcfg, lp, h, st)
+            return h, new_st
+
+        h, new_mstates = jax.lax.scan(inner, h, (round_params, mstates))
+        return h, (new_attn, new_mstates)
+
+    if not decode:
+        h, _ = jax.lax.scan(_maybe_remat(round_body_train, cfg.remat), h, params["rounds"])
+        if rem:
+            h, _ = _shared_block(cfg, acfg, params["shared"], h, x_emb, positions, None)
+
+            def inner(h, lp):
+                h, _ = _mamba_layer(cfg, mcfg, lp, h, None)
+                return h, None
+
+            h, _ = jax.lax.scan(inner, h, params["epilogue"])
+        return h, None
+
+    # decode: caches = {"attn": [n_inv, ...], "mamba": [L, ...]}
+    n_inv = full + (1 if rem else 0)
+    attn_caches = caches["attn"]
+    mamba_states = caches["mamba"]
+    main_attn = jax.tree.map(lambda a: a[:full], attn_caches)
+    main_m = jax.tree.map(lambda a: a[: full * period].reshape(full, period, *a.shape[1:]), mamba_states)
+    h, (new_attn_main, new_m_main) = jax.lax.scan(
+        round_body_decode, h, (params["rounds"], main_attn, main_m)
+    )
+    new_m_main = jax.tree.map(lambda a: a.reshape(full * period, *a.shape[2:]), new_m_main)
+    if rem:
+        epi_attn = jax.tree.map(lambda a: a[full], attn_caches)
+        h, new_attn_epi = _shared_block(cfg, acfg, params["shared"], h, x_emb, positions, epi_attn)
+
+        def inner(h, xs2):
+            lp, st = xs2
+            h, new_st = _mamba_layer(cfg, mcfg, lp, h, st)
+            return h, new_st
+
+        epi_m = jax.tree.map(lambda a: a[full * period :], mamba_states)
+        h, new_m_epi = jax.lax.scan(inner, h, (params["epilogue"], epi_m))
+        new_attn = jax.tree.map(
+            lambda m, e: jnp.concatenate([m, e[None]], axis=0), new_attn_main, new_attn_epi
+        )
+        new_m = jax.tree.map(lambda m, e: jnp.concatenate([m, e], axis=0), new_m_main, new_m_epi)
+    else:
+        new_attn, new_m = new_attn_main, new_m_main
+    return h, {"attn": new_attn, "mamba": new_m}
+
+
+def _stack_rwkv(cfg, params, h, states):
+    rcfg = cfg.rwkv_config()
+    if states is None:
+        def body(h, layer_params):
+            h, _ = _rwkv_layer(cfg, rcfg, layer_params, h, None)
+            return h, None
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg.remat), h, params["layers"])
+        return h, None
+
+    def body(h, xs):
+        layer_params, state = xs
+        h, new_state = _rwkv_layer(cfg, rcfg, layer_params, h, state)
+        return h, new_state
+
+    h, new_states = jax.lax.scan(body, h, (params["layers"], states))
+    return h, new_states
+
+
+def _stack_encoder(cfg, params, h):
+    acfg = cfg.attention_config()
+
+    def body(h, layer_params):
+        a_in = layernorm(layer_params["ln1"], h, eps=cfg.norm_eps)
+        a_out, _ = attn.attention_apply(layer_params["attn"], a_in, acfg, use_pallas=cfg.use_pallas)
+        h = h + a_out
+        f_in = layernorm(layer_params["ln2"], h, eps=cfg.norm_eps)
+        h = h + ffn.gelu_mlp_apply(layer_params["mlp"], f_in)
+        return h, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg.remat), h, params["layers"])
+    return h
+
+
+# ===========================================================================
+# Top-level forward / loss / decode
+# ===========================================================================
+
+def _logits(cfg: ModelConfig, params, h) -> Array:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return constrain(unembed_logits(table, h), ("batch", None, "vocab"))
+
+
+def forward_lm(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: Array,                    # [B, S]
+    *,
+    caches: Any = None,
+    moe_groups: int = 1,
+) -> tuple[Array, Any, Array]:
+    """Returns (logits [B, S, vocab], new_caches, aux_loss)."""
+    h = constrain(embed(params["embed"], tokens), ("batch", None, "embed"))
+    S = tokens.shape[1]
+    aux = jnp.zeros((), jnp.float32)
+    positions = jnp.arange(S) + (caches["pos"] if caches is not None else 0)
+    inner = caches["layers"] if caches is not None else None
+
+    if cfg.family in ("dense", "moe"):
+        h, new_inner, aux = _stack_dense(cfg, params, h, positions, inner, moe_groups=moe_groups)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+    elif cfg.family == "hybrid":
+        h, new_inner = _stack_hybrid(cfg, params, h, h, positions, inner)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+    elif cfg.family == "rwkv":
+        h = layernorm(params["ln_in"], h, eps=cfg.norm_eps)
+        h, new_inner = _stack_rwkv(cfg, params, h, inner)
+        h = layernorm(params["ln_out"], h, eps=cfg.norm_eps)
+    else:
+        raise ValueError(f"forward_lm does not support family {cfg.family}")
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_inner, "pos": caches["pos"] + S}
+    return _logits(cfg, params, h), new_caches, aux
+
+
+def forward_encoder(cfg: ModelConfig, params: dict, frames: Array) -> Array:
+    """hubert: frames [B, T, d_model] (stub frontend) -> logits [B, T, vocab]."""
+    h = linear(params["in_proj"], frames)
+    # conv positional embedding (strided taps keep the unrolled HLO small)
+    pos = params["pos_conv"].astype(h.dtype)                   # [128, d]
+    Kw = pos.shape[0]
+    hp = jnp.pad(h, ((0, 0), (Kw // 2, Kw - 1 - Kw // 2), (0, 0)))
+    conv = jnp.zeros_like(h)
+    for i in range(0, Kw, 16):
+        conv = conv + hp[:, i : i + h.shape[1], :] * pos[i][None, None, :]
+    h = h + jax.nn.gelu(conv)
+    h = layernorm(params["ln_in"], h, eps=cfg.norm_eps)
+    h = _stack_encoder(cfg, params, h)
+    h = layernorm(params["ln_out"], h, eps=cfg.norm_eps)
+    return linear(params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def _backbone_hidden(cfg: ModelConfig, params: dict, tokens: Array, *, moe_groups: int = 1):
+    """Hidden states before the unembedding (for streamed losses)."""
+    h = constrain(embed(params["embed"], tokens), ("batch", None, "embed"))
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "moe"):
+        h, _, aux = _stack_dense(cfg, params, h, positions, None, moe_groups=moe_groups)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+    elif cfg.family == "hybrid":
+        h, _ = _stack_hybrid(cfg, params, h, h, positions, None)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+    elif cfg.family == "rwkv":
+        h = layernorm(params["ln_in"], h, eps=cfg.norm_eps)
+        h, _ = _stack_rwkv(cfg, params, h, None)
+        h = layernorm(params["ln_out"], h, eps=cfg.norm_eps)
+    else:
+        raise ValueError(cfg.family)
+    return h, aux
+
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: dict, *, moe_groups: int = 1):
+    tokens = batch["tokens"]
+    if cfg.loss_seq_chunks > 1:
+        from repro.models.common import seq_chunked_cross_entropy
+
+        h, aux = _backbone_hidden(cfg, params, tokens[:, :-1], moe_groups=moe_groups)
+        table = (params["embed"] if cfg.tie_embeddings else params["unembed"])["table"]
+        ce = seq_chunked_cross_entropy(h, table, tokens[:, 1:], chunks=cfg.loss_seq_chunks)
+    else:
+        logits, _, aux = forward_lm(cfg, params, tokens[:, :-1], moe_groups=moe_groups)
+        ce = softmax_cross_entropy(logits, tokens[:, 1:])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def encoder_loss(cfg: ModelConfig, params: dict, batch: dict, **_):
+    logits = forward_encoder(cfg, params, batch["frames"])
+    ce = softmax_cross_entropy(logits, batch["targets"], mask=batch["mask"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, moe_groups: int = 1):
+    if cfg.family == "encoder":
+        return encoder_loss(cfg, params, batch)
+    return lm_loss(cfg, params, batch, moe_groups=moe_groups)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    acfg = cfg.attention_config()
+    if cfg.family in ("dense", "moe"):
+        c = attn.init_cache(acfg, batch, max_len, dtype)
+        stacked = jax.tree.map(lambda a: jnp.zeros((cfg.num_layers, *a.shape), a.dtype), c)
+        return {"layers": stacked, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        full, period, rem = hybrid_layout(cfg)
+        n_inv = full + (1 if rem else 0)
+        ac = attn.init_cache(acfg, batch, max_len, dtype)
+        ms = mamba2.init_mamba_state(cfg.mamba_config(), batch, dtype)
+        return {
+            "layers": {
+                "attn": jax.tree.map(lambda a: jnp.zeros((n_inv, *a.shape), a.dtype), ac),
+                "mamba": jax.tree.map(lambda a: jnp.zeros((cfg.num_layers, *a.shape), a.dtype), ms),
+            },
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "rwkv":
+        s = rwkv6.init_rwkv_state(cfg.rwkv_config(), batch, dtype)
+        return {
+            "layers": jax.tree.map(lambda a: jnp.zeros((cfg.num_layers, *a.shape), a.dtype), s),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(f"no decode caches for family {cfg.family}")
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches, tokens: Array, *, moe_groups: int = 1):
+    """One serve step: tokens [B, 1] -> (logits [B, 1, V], new_caches)."""
+    logits, new_caches, _ = forward_lm(cfg, params, tokens, caches=caches, moe_groups=moe_groups)
+    return logits, new_caches

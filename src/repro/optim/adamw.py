@@ -1,0 +1,84 @@
+"""AdamW with fp32 master weights and bf16 compute params.
+
+State layout (a pytree mirroring params):
+    master -- fp32 copy of params (the source of truth)
+    m, v   -- fp32 first/second moments
+``adamw_update`` consumes *bf16-computed* grads, applies global-norm
+clipping, and returns (new_state, new_compute_params).  All state leaves
+carry logical-axis metadata via the same spec tree as the params, with an
+extra ZeRO sharding dimension chosen by ``distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: PyTree) -> dict:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"master": master, "m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    state: dict,
+    grads: PyTree,
+    cfg: AdamWConfig,
+    *,
+    lr_scale: Array | float = 1.0,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[dict, PyTree, dict]:
+    """Returns (new_state, new_compute_params, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+    lr = cfg.lr * lr_scale
+
+    def upd(master, m, v, g):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        master = master - lr * (update + cfg.weight_decay * master)
+        return master, m, v
+
+    flat_master, treedef = jax.tree.flatten(state["master"])
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_g = jax.tree.leaves(grads)
+    out = [upd(a, b, c, d) for a, b, c, d in zip(flat_master, flat_m, flat_v, flat_g)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(compute_dtype), new_master)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_state, new_params, {"grad_norm": gnorm, "lr": lr}

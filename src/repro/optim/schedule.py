@@ -1,0 +1,27 @@
+"""Learning-rate schedules (scalar-in, scalar-out; jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def linear_decay(step, *, warmup_steps: int, total_steps: int, min_ratio: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    return warm * (1.0 - (1.0 - min_ratio) * frac)
+
+
+def constant(step, **_):
+    return jnp.ones((), jnp.float32)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "linear": linear_decay, "constant": constant}

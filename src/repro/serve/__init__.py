@@ -1,0 +1,3 @@
+from repro.serve.engine import EnsembleServer, ServeConfig, Server
+
+__all__ = [k for k in dir() if not k.startswith("_")]

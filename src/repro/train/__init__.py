@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, Trainer, init_state, make_train_step
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,172 @@
+"""Training loop: step builder (mixed precision + ZeRO sharding constraints +
+optional microbatch gradient accumulation) and a preemption-safe Trainer.
+
+The data pipeline is the RSP loader: every batch is a block-level sample
+(Definition 4), and its O(1) sampler state rides along in each checkpoint so
+a restart reproduces the exact batch sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store as ckpt
+from repro.distributed.sharding import ShardingRules, activation_sharding
+from repro.models import api
+from repro.models.common import init_params
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import SCHEDULES
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    warmup_steps: int = 10
+    schedule: str = "cosine"
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    microbatch: int = 0          # 0 = no accumulation; else per-step microbatch count
+    moe_groups: int = 1
+    seed: int = 0
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    train_cfg: TrainConfig,
+    *,
+    rules: ShardingRules | None = None,
+) -> Callable:
+    """Pure (state, batch) -> (state, metrics).  state = {params, opt}."""
+    loss_fn = api.make_loss_fn(cfg, moe_groups=train_cfg.moe_groups)
+    schedule = SCHEDULES[train_cfg.schedule]
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step_fn(state, batch):
+        with activation_sharding(rules):
+            params = state["params"]
+            if train_cfg.microbatch > 1:
+                # split the global batch into microbatches; accumulate fp32
+                n = train_cfg.microbatch
+                parts = jax.tree.map(lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+                def acc_body(carry, mb):
+                    loss_a, grads_a = carry
+                    loss, metrics, grads = grads_of(params, mb)
+                    grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+                    return (loss_a + loss / n, grads), metrics
+
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), metrics_all = jax.lax.scan(acc_body, (0.0, zero), parts)
+                grads = jax.tree.map(lambda g: g / n, grads)
+                metrics = jax.tree.map(lambda a: a[-1], metrics_all)
+            else:
+                loss, metrics, grads = grads_of(params, batch)
+
+            lr_scale = schedule(
+                state["opt"]["step"],
+                warmup_steps=train_cfg.warmup_steps,
+                total_steps=train_cfg.total_steps,
+            )
+            new_opt, new_params, stats = adamw_update(
+                state["opt"], grads, opt_cfg, lr_scale=lr_scale
+            )
+            out_metrics = {"loss": loss, **metrics, **stats}
+            return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return step_fn
+
+
+def init_state(cfg: ModelConfig, seed: int = 0, compute_dtype=jnp.bfloat16) -> dict:
+    specs = api.model_specs(cfg)
+    master = init_params(specs, jax.random.PRNGKey(seed))
+    opt = adamw_init(master)
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), master)
+    return {"params": params, "opt": opt}
+
+
+class Trainer:
+    """Checkpoint/restart training driver.
+
+    Fault tolerance: SIGTERM/SIGINT triggers a final checkpoint; on start,
+    the latest checkpoint (params, optimizer, *and loader state*) is restored
+    so a killed run resumes exactly where it stopped.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: AdamWConfig,
+        train_cfg: TrainConfig,
+        loader,                       # RSPLoader-compatible (next_batch/state_dict)
+        ckpt_dir: str,
+        *,
+        rules: ShardingRules | None = None,
+        batch_transform: Callable | None = None,
+    ):
+        self.cfg, self.opt_cfg, self.train_cfg = cfg, opt_cfg, train_cfg
+        self.loader = loader
+        self.ckpt_dir = ckpt_dir
+        self.rules = rules
+        self.batch_transform = batch_transform or (lambda b: b)
+        self.step_fn = jax.jit(make_train_step(cfg, opt_cfg, train_cfg, rules=rules))
+        self.checkpointer = ckpt.AsyncCheckpointer(ckpt_dir, keep_last=train_cfg.keep_checkpoints)
+        self.history: list[dict] = []
+        self._preempted = False
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not on main thread
+
+    def run(self, state: dict | None = None, *, stop_after_steps: int | None = None) -> dict:
+        """``stop_after_steps`` emulates preemption after N steps (the final
+        checkpoint is written exactly as the SIGTERM path would)."""
+        self._install_signal_handlers()
+        start_step = 0
+        if state is None:
+            latest = ckpt.latest_step(self.ckpt_dir)
+            if latest is not None:
+                like = jax.eval_shape(lambda: init_state(self.cfg, self.train_cfg.seed))
+                state, extra = ckpt.restore(self.ckpt_dir, latest, like)
+                self.loader.load_state_dict(extra["loader"])
+                start_step = latest
+            else:
+                state = init_state(self.cfg, self.train_cfg.seed)
+
+        for step in range(start_step, self.train_cfg.total_steps):
+            if stop_after_steps is not None and step - start_step >= stop_after_steps:
+                self._preempted = True
+                self.checkpointer.save(step, state, extra={"loader": self.loader.state_dict()})
+                break
+            batch = self.batch_transform(self.loader.next_batch())
+            t0 = time.time()
+            state, metrics = self.step_fn(state, batch)
+            if (step + 1) % self.train_cfg.log_every == 0 or step == start_step:
+                metrics = jax.tree.map(lambda a: float(a), metrics)
+                metrics.update(step=step + 1, sec_per_step=time.time() - t0)
+                self.history.append(metrics)
+            if (step + 1) % self.train_cfg.checkpoint_every == 0 or self._preempted:
+                self.checkpointer.save(
+                    step + 1, state, extra={"loader": self.loader.state_dict()}
+                )
+            if self._preempted:
+                break
+        self.checkpointer.wait()
+        return state

@@ -1,0 +1,57 @@
+"""Distributed (shard_map + all_to_all) Algorithm-1 tests.
+
+These must run with multiple XLA host devices; device count is locked at
+first jax init, so they execute in a subprocess with XLA_FLAGS set.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed_rsp_partition, is_partition, RSPSpec, two_stage_partition_np
+from repro.core.similarity import max_label_divergence
+from repro.data import make_nonrandom_higgs_like
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+# class-sorted (worst case) data
+x, y = make_nonrandom_higgs_like(6400, seed=1)
+data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+
+out = np.asarray(distributed_rsp_partition(jnp.asarray(data), jax.random.PRNGKey(7), mesh, axis="data"))
+assert out.shape == (8, 800, 29), out.shape
+assert is_partition(out, data), "not a partition"
+for k in range(8):
+    div = max_label_divergence(out[k][:, -1], y, 2)
+    assert div < 0.06, f"block {k} label divergence {div}"
+
+# determinism
+out2 = np.asarray(distributed_rsp_partition(jnp.asarray(data), jax.random.PRNGKey(7), mesh, axis="data"))
+np.testing.assert_array_equal(out, out2)
+
+# non-square N must raise
+try:
+    distributed_rsp_partition(jnp.asarray(data[:100]), jax.random.PRNGKey(0), mesh, axis="data")
+    raise SystemExit("expected ValueError")
+except ValueError:
+    pass
+print("DISTRIBUTED_RSP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_rsp_partition_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True, timeout=600
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DISTRIBUTED_RSP_OK" in proc.stdout

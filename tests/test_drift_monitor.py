@@ -1,0 +1,52 @@
+"""DriftMonitor (Sec.-10 extension): clean RSP blocks pass, shifted /
+corrupted blocks are flagged."""
+
+import numpy as np
+
+from repro.core import RSPSpec, two_stage_partition_np
+from repro.core.monitor import DriftMonitor
+from repro.data import make_higgs_like
+
+
+def _blocks(seed=0, n=20000, k=20):
+    x, _ = make_higgs_like(n, seed=seed)
+    spec = RSPSpec(num_records=n, num_blocks=k, num_original_blocks=k, seed=1)
+    return two_stage_partition_np(x, spec)
+
+
+def test_clean_blocks_not_flagged():
+    blocks = _blocks()
+    mon = DriftMonitor(blocks[:5], seed=0)
+    for i in range(5, 15):
+        r = mon.score(blocks[i], block_id=i)
+        assert not r.drifted, f"clean block {i} flagged: mmd={r.mmd2}, z={r.max_mean_z}"
+    assert mon.drifted_blocks() == []
+
+
+def test_mean_shifted_block_flagged():
+    blocks = _blocks()
+    mon = DriftMonitor(blocks[:5], seed=0)
+    bad = blocks[10] + 1.5
+    r = mon.score(bad, block_id=10)
+    assert r.drifted and r.max_mean_z > mon.z_threshold
+
+
+def test_different_distribution_flagged():
+    """Blocks from a 'different data centre' (different covariance) are
+    caught by MMD even with matching means."""
+    blocks = _blocks()
+    mon = DriftMonitor(blocks[:5], seed=0)
+    rng = np.random.default_rng(7)
+    other = rng.standard_t(df=1.5, size=blocks[0].shape).astype(np.float32)
+    other = other - other.mean(0) + blocks[:5].reshape(-1, blocks.shape[-1]).mean(0)
+    r = mon.score(other, block_id=99)
+    assert r.drifted and r.mmd2 > mon.mmd_threshold
+
+
+def test_corrupted_shard_tripwire():
+    blocks = _blocks()
+    mon = DriftMonitor(blocks[:5], seed=0)
+    corrupted = blocks[12].copy()
+    corrupted[:, 3] = 0.0  # dead feature (e.g. bad decode of one column)
+    r = mon.score(corrupted, block_id=12)
+    assert r.drifted

@@ -1,0 +1,124 @@
+"""Launch-path tests: the multi-pod dry-run machinery end to end on one
+small cell per mesh (subprocess: the dry-run needs its own 512-device jax
+runtime), plus unit tests of the structural HLO analyzer."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_cell(args, timeout=2400):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_single_and_multi_pod_cell(tmp_path):
+    for extra in ([], ["--multi-pod"]):
+        proc = _run_cell(["--arch", "qwen2-0.5b", "--shape", "decode_32k",
+                          "--out", str(tmp_path), *extra])
+        assert proc.returncode == 0, proc.stderr[-3000:]
+    single = json.load(open(tmp_path / "qwen2-0.5b_decode_32k_single.json"))
+    multi = json.load(open(tmp_path / "qwen2-0.5b_decode_32k_multi.json"))
+    for r in (single, multi):
+        assert r["analysis"]["flops"] > 0
+        assert r["memory"]["argument_size_in_bytes"] > 0
+        # decode KV cache + params must fit a 16 GiB chip
+        used = r["memory"]["argument_size_in_bytes"] + r["memory"]["temp_size_in_bytes"]
+        assert used < 16 * 1024**3, f"{used/1e9:.1f} GB"
+    # multi-pod shards the batch over 2x more DP ways -> fewer flops per chip
+    assert multi["analysis"]["flops"] <= single["analysis"]["flops"] * 1.05
+
+
+@pytest.mark.slow
+def test_dryrun_rsp_partition_program(tmp_path):
+    proc = _run_cell(["--arch", "rsp-partition", "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    r = json.load(open(tmp_path / "rsp-partition_single.json"))
+    # pure data movement: no matmul flops, bytes ~ slab size
+    assert r["analysis"]["flops"] == 0
+    assert r["analysis"]["bytes"] > 1e8
+
+
+def test_hlo_analyzer_scales_loop_bodies():
+    from repro.launch.roofline import analyze_hlo
+
+    hlo = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %init = (s32[], f32[8,8]) tuple(%a, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    a = analyze_hlo(hlo)
+    # one 8x8x8 dot (1024 flops) x 5 trips
+    assert a["flops"] == pytest.approx(2 * 8 * 8 * 8 * 5)
+
+
+def test_hlo_analyzer_collectives_and_factors():
+    from repro.launch.roofline import analyze_hlo, roofline_terms
+
+    hlo = """\
+HloModule test
+
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%a), to_apply=%sum
+  ROOT %ag = f32[1024]{0} all-gather(%ar), dimensions={0}
+}
+
+%sum (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+    a = analyze_hlo(hlo)
+    assert a["collectives"]["all-reduce"]["bytes"] == 4096
+    assert a["collectives"]["all-gather"]["bytes"] == 4096
+    t = roofline_terms(a, chips=256)
+    # wire = 2x all-reduce + 1x all-gather
+    assert t["wire_bytes"] == pytest.approx(2 * 4096 + 4096)
+
+
+def test_model_flops_sanity():
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.roofline import model_flops
+
+    # dense train ~ 6 N D
+    f = model_flops(ARCHS["llama3.2-1b"], SHAPES["train_4k"])
+    assert 6e15 < f < 1.2e16
+    # MoE active params ~3B of 30B -> flops closer to a 3B dense model
+    f_moe = model_flops(ARCHS["qwen3-moe-30b-a3b"], SHAPES["train_4k"])
+    f_dense30 = 6 * 30e9 * 256 * 4096
+    assert f_moe < 0.25 * f_dense30
+    # decode processes B tokens, not B*S
+    f_dec = model_flops(ARCHS["llama3.2-1b"], SHAPES["decode_32k"])
+    assert f_dec < f / 1000

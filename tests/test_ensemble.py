@@ -1,0 +1,97 @@
+"""Algorithm 2 (asymptotic ensemble learning) tests reproducing the paper's
+Fig-6 claims on synthetic HIGGS-like data."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    RSPSpec,
+    asymptotic_ensemble_learn,
+    ensemble_vs_single_model,
+    make_logreg,
+    make_mlp,
+    train_base_models_vmapped,
+    two_stage_partition_np,
+)
+from repro.data import make_higgs_like
+
+
+@pytest.fixture(scope="module")
+def higgs_blocks():
+    N, Ne, K = 20000, 4000, 20
+    x, y = make_higgs_like(N + Ne, seed=2, class_sep=1.5)
+    xe, ye = x[N:], y[N:]
+    x, y = x[:N], y[:N]
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=5)
+    blocks = two_stage_partition_np(data, spec)
+    return (
+        jnp.asarray(blocks[:, :, :-1]),
+        jnp.asarray(blocks[:, :, -1].astype(np.int32)),
+        jnp.asarray(xe),
+        jnp.asarray(ye),
+    )
+
+
+def test_vmapped_base_models_match_sequential(higgs_blocks):
+    bx, by, xe, ye = higgs_blocks
+    learner = make_logreg(bx.shape[-1], 2, steps=50, lr=0.5)
+    key = jax.random.PRNGKey(0)
+    stacked = train_base_models_vmapped(learner, key, bx[:3], by[:3])
+    keys = jax.random.split(key, 3)
+    for i in range(3):
+        solo = learner.fit(learner.init(keys[i]), bx[i], by[i])
+        for name in solo:
+            np.testing.assert_allclose(
+                np.asarray(jax.tree.map(lambda a: a[i], stacked)[name]),
+                np.asarray(solo[name]),
+                rtol=2e-3,
+                atol=2e-4,
+            )
+
+
+def test_ensemble_accuracy_plateaus(higgs_blocks):
+    bx, by, xe, ye = higgs_blocks
+    learner = make_logreg(bx.shape[-1], 2, steps=150, lr=0.5)
+    ens, hist = asymptotic_ensemble_learn(
+        bx, by, learner=learner, eval_x=xe, eval_y=ye, g=4, seed=0
+    )
+    assert len(hist.accuracy) >= 2
+    assert hist.accuracy[-1] > 0.70  # far above chance
+    # termination before exhausting all blocks (plateau detected), Fig 6
+    assert ens.num_models <= bx.shape[0]
+
+
+def test_ensemble_matches_single_full_data_model(higgs_blocks):
+    """Paper's central Fig-6 claim: block ensemble ~ single full-data model."""
+    bx, by, xe, ye = higgs_blocks
+    learner = make_logreg(bx.shape[-1], 2, steps=150, lr=0.5)
+    ens_acc, single_acc = ensemble_vs_single_model(
+        bx, by, xe, ye, learner=learner, seed=0
+    )
+    assert ens_acc >= single_acc - 0.01  # equivalent within 1 pt
+
+
+def test_ensemble_beats_single_block_model(higgs_blocks):
+    bx, by, xe, ye = higgs_blocks
+    learner = make_mlp(bx.shape[-1], 2, hidden=16, steps=150, lr=0.05)
+    ens, hist = asymptotic_ensemble_learn(
+        bx, by, learner=learner, eval_x=xe, eval_y=ye, g=4, seed=1, max_batches=2
+    )
+    params = learner.fit(learner.init(jax.random.PRNGKey(9)), bx[0], by[0])
+    single_block_acc = float(
+        (jnp.argmax(learner.predict_proba(params, xe), -1) == ye).mean()
+    )
+    assert ens.accuracy(xe, ye) >= single_block_acc - 0.02
+
+
+def test_ensemble_history_monotone_blocks(higgs_blocks):
+    bx, by, xe, ye = higgs_blocks
+    learner = make_logreg(bx.shape[-1], 2, steps=50, lr=0.5)
+    _, hist = asymptotic_ensemble_learn(
+        bx, by, learner=learner, eval_x=xe, eval_y=ye, g=3, seed=2, max_batches=3
+    )
+    assert hist.blocks_used == sorted(hist.blocks_used)
+    assert all(b % 3 == 0 for b in hist.blocks_used)

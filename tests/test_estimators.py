@@ -1,0 +1,113 @@
+"""Block-level estimation (Sec. 8): exactness of the streaming combine and
+convergence of block-level estimates to full-data statistics (Figs. 3/4)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockLevelEstimator,
+    RSPSpec,
+    batched_block_moments,
+    block_histogram,
+    block_moments,
+    combine_moments,
+    quantile_from_histogram,
+    two_stage_partition_np,
+)
+
+
+def test_combine_is_exact():
+    rng = np.random.default_rng(0)
+    a = rng.normal(2.0, 3.0, size=(500, 4)).astype(np.float32)
+    b = rng.normal(-1.0, 0.5, size=(300, 4)).astype(np.float32)
+    combined = combine_moments(block_moments(jnp.asarray(a)), block_moments(jnp.asarray(b)))
+    full = np.concatenate([a, b])
+    np.testing.assert_allclose(combined.mean, full.mean(0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(combined.std, full.std(0, ddof=1), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(combined.min, full.min(0))
+    np.testing.assert_allclose(combined.max, full.max(0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n1=st.integers(2, 400),
+    n2=st.integers(2, 400),
+    scale=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_property(n1, n2, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.normal(size=(n1, 3)) * scale).astype(np.float32)
+    b = (rng.normal(size=(n2, 3)) * scale).astype(np.float32)
+    combined = combine_moments(block_moments(jnp.asarray(a)), block_moments(jnp.asarray(b)))
+    full = np.concatenate([a, b])
+    np.testing.assert_allclose(combined.mean, full.mean(0), rtol=1e-3, atol=1e-3 * scale)
+    np.testing.assert_allclose(combined.std, full.std(0, ddof=1), rtol=1e-2, atol=1e-3 * scale)
+
+
+def test_block_level_estimation_converges():
+    """Fig 3/4: estimates from few blocks are close; adding blocks converges
+    towards the full-data value."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(1.5, 2.0, size=(20000, 4)).astype(np.float32)
+    spec = RSPSpec(num_records=20000, num_blocks=50, num_original_blocks=50, seed=7)
+    blocks = two_stage_partition_np(data, spec)
+
+    est = BlockLevelEstimator()
+    errors = []
+    for k in range(10):
+        est.update(jnp.asarray(blocks[k]))
+        errors.append(float(np.max(np.abs(est.stats.mean - data.mean(0)))))
+    # error with 1 block already small (block n=400, se ~ 2/sqrt(400) = 0.1)
+    assert errors[0] < 0.5
+    # 10-block estimate much tighter
+    assert errors[-1] < 0.08
+    np.testing.assert_allclose(est.stats.std, data.std(0, ddof=1), rtol=0.05)
+
+
+def test_estimator_exact_after_all_blocks():
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(4096, 3)).astype(np.float32)
+    spec = RSPSpec(num_records=4096, num_blocks=8, num_original_blocks=8, seed=1)
+    blocks = two_stage_partition_np(data, spec)
+    est = BlockLevelEstimator()
+    for k in range(8):
+        est.update(jnp.asarray(blocks[k]))
+    # having consumed the whole partition, estimate == full-data statistic
+    np.testing.assert_allclose(est.stats.mean, data.mean(0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(est.stats.std, data.std(0, ddof=1), rtol=1e-4, atol=1e-5)
+    assert est.stats.count == 4096
+
+
+def test_convergence_plateau_detection():
+    rng = np.random.default_rng(6)
+    data = rng.normal(10.0, 1.0, size=(19200, 2)).astype(np.float32)
+    spec = RSPSpec(num_records=19200, num_blocks=40, num_original_blocks=40, seed=2)
+    blocks = two_stage_partition_np(data, spec)
+    est = BlockLevelEstimator()
+    converged_at = None
+    for k in range(40):
+        est.update(jnp.asarray(blocks[k]))
+        if est.converged(rel_tol=1e-3):
+            converged_at = k
+            break
+    assert converged_at is not None and converged_at < 39  # stops early
+
+
+def test_batched_block_moments_matches_loop():
+    rng = np.random.default_rng(8)
+    blocks = rng.normal(size=(6, 100, 5)).astype(np.float32)
+    means, stds = batched_block_moments(jnp.asarray(blocks))
+    np.testing.assert_allclose(np.asarray(means), blocks.mean(1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(stds), blocks.std(1, ddof=1), rtol=1e-4, atol=1e-6)
+
+
+def test_histogram_quantiles():
+    rng = np.random.default_rng(9)
+    data = rng.normal(size=(50000, 2)).astype(np.float32)
+    h = block_histogram(data[:25000], bins=256, lo=-6, hi=6)
+    h += block_histogram(data[25000:], bins=256, lo=-6, hi=6)
+    q = quantile_from_histogram(h, [0.25, 0.5, 0.75], lo=-6, hi=6)
+    truth = np.quantile(data, [0.25, 0.5, 0.75], axis=0).T
+    np.testing.assert_allclose(q, truth, atol=0.08)

@@ -1,0 +1,34 @@
+"""Examples must run end to end (subprocess; fast configs only)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+def test_quickstart_runs():
+    proc = _run("quickstart.py")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "ensemble accuracy per batch" in proc.stdout
+    assert "worst label divergence 0.0" in proc.stdout
+
+
+@pytest.mark.slow
+def test_train_lm_rsp_preempt_restart():
+    proc = _run("train_lm_rsp.py", "--steps", "10", "--preempt-at", "5")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "(OK)" in proc.stdout
+    assert "restart resumed exactly" in proc.stdout

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes and finiteness, plus a decode-vs-forward
+consistency check for every family that serves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.configs.shapes import ShapeCell
+from repro.models import api, transformer
+from repro.models.common import init_params, param_count
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401  (exercised in test_train)
+
+CELL = ShapeCell("smoke", "train", 16, 2)
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = smoke_config(arch)
+        specs = api.model_specs(cfg)
+        params = init_params(specs, jax.random.PRNGKey(0))
+        out[arch] = (cfg, specs, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_forward_and_loss(arch, built):
+    cfg, specs, params = built[arch]
+    batch = api.concrete_inputs(cfg, CELL, seed=1)
+    loss, metrics = jax.jit(api.make_loss_fn(cfg))(params, batch)
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    # near ln(vocab) at init (well-conditioned initialization)
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3.0 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_forward_shapes(arch, built):
+    cfg, specs, params = built[arch]
+    batch = api.concrete_inputs(cfg, CELL, seed=2)
+    fwd = jax.jit(api.make_forward_fn(cfg))
+    logits = fwd(params, batch)
+    S = batch["frames"].shape[1] if cfg.family == "encoder" else batch["tokens"].shape[1]
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_grad_step_decreases_loss(arch, built):
+    cfg, specs, params = built[arch]
+    batch = api.concrete_inputs(cfg, CELL, seed=3)
+    loss_fn = api.make_loss_fn(cfg)
+
+    @jax.jit
+    def sgd(params, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        new = jax.tree.map(lambda p, g: p - 0.3 * g.astype(p.dtype), params, grads)
+        return loss, new
+
+    l0, params1 = sgd(params, batch)
+    l1, _ = sgd(params1, batch)
+    assert jnp.isfinite(l0) and jnp.isfinite(l1)
+    assert float(l1) < float(l0), f"{arch}: {float(l0)} -> {float(l1)}"
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ARCHS if ARCHS[a].family != "encoder"],
+)
+def test_decode_matches_forward(arch, built):
+    """Greedy decode logits == teacher-forced forward logits, per position."""
+    cfg, specs, params = built[arch]
+    rng = np.random.default_rng(4)
+    T = 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, T), np.int32))
+    full_logits = jax.jit(api.make_forward_fn(cfg))(params, {"tokens": tokens})
+
+    caches = transformer.init_caches(cfg, 2, T, dtype=jnp.float32)
+    decode = jax.jit(api.make_decode_fn(cfg))
+    got = []
+    for t in range(T):
+        logits, caches = decode(params, caches, {"tokens": tokens[:, t : t + 1]})
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(full_logits), rtol=8e-2, atol=8e-2
+    )
+    # argmax agreement (the thing that matters for greedy decoding)
+    agree = (jnp.argmax(got, -1) == jnp.argmax(full_logits, -1)).mean()
+    assert float(agree) > 0.9, f"{arch}: argmax agreement {float(agree)}"
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCHS if ARCHS[a].family != "encoder"]
+)
+def test_prefill_then_decode(arch, built):
+    cfg, specs, params = built[arch]
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8), np.int32))
+    caches = transformer.init_caches(cfg, 2, 16, dtype=jnp.float32)
+    prefill = jax.jit(api.make_prefill_fn(cfg))
+    logits, caches = prefill(params, caches, {"tokens": tokens[:, :7]})
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    decode = jax.jit(api.make_decode_fn(cfg))
+    logits2, caches = decode(params, caches, {"tokens": tokens[:, 7:8]})
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(caches["pos"]) == 8
+
+
+def test_exact_arch_dims():
+    """The registry carries the exact assigned dimensions."""
+    c = ARCHS["granite-20b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == (
+        52, 6144, 48, 1, 24576, 49152,
+    )
+    c = ARCHS["qwen3-moe-30b-a3b"]
+    assert (c.num_experts, c.num_experts_per_token, c.d_ff, c.vocab_size) == (128, 8, 768, 151936)
+    c = ARCHS["zamba2-7b"]
+    assert (c.num_layers, c.d_model, c.ssm_state, c.attn_every) == (81, 3584, 64, 6)
+    c = ARCHS["rwkv6-1.6b"]
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == (24, 2048, 7168, 65536)
+    c = ARCHS["hubert-xlarge"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == (48, 1280, 16, 5120, 504)
+    assert not c.causal
+
+
+def test_full_param_counts_sane():
+    """Full-config parameter counts are in the advertised ballpark."""
+    from repro.models.api import model_specs
+
+    expect = {
+        "llama3.2-1b": (1.0e9, 1.9e9),
+        "granite-20b": (18e9, 23e9),
+        "qwen3-14b": (12e9, 16.5e9),
+        "qwen2-0.5b": (0.35e9, 0.75e9),
+        "zamba2-7b": (6e9, 9e9),
+        "chameleon-34b": (30e9, 37e9),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+        "qwen3-moe-30b-a3b": (26e9, 33e9),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(model_specs(ARCHS[arch]))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]"

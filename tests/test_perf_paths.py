@@ -1,0 +1,147 @@
+"""Beyond-paper perf paths must be numerically equivalent to the
+paper-faithful baselines (EXPERIMENTS.md §Perf): flat-head flash (+ custom
+VJP), seq-chunked CE, MoE sort/slot dispatch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import api
+from repro.models.attention import (
+    _reference_attention,
+    flash_attention_flat,
+    flash_flat_cvjp,
+)
+from repro.models.common import (
+    init_params,
+    seq_chunked_cross_entropy,
+    softmax_cross_entropy,
+)
+from repro.models.moe import MoEConfig, moe_apply, moe_specs, _sorted_positions
+
+
+# ---------------------------------------------------------------------------
+# flat flash + custom VJP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_flat_matches_reference(causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, S, D = 2, 4, 64, 16
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    pos = jnp.arange(S)
+    got = flash_attention_flat(q, k, v, q_positions=pos, kv_positions=pos, causal=causal, k_block=16)
+    want = _reference_attention(
+        q[:, :, None], k, v, q_positions=pos, kv_positions=pos, causal=causal
+    )[:, :, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_cvjp_grads_match_autodiff(causal):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, S, D = 1, 2, 32, 8
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    pos = jnp.arange(S)
+
+    def f_c(q, k, v):
+        return (flash_flat_cvjp(q, k, v, causal, 8) ** 2).sum()
+
+    def f_r(q, k, v):
+        out = _reference_attention(q[:, :, None], k, v, q_positions=pos, kv_positions=pos, causal=causal)
+        return (out[:, :, 0] ** 2).sum()
+
+    gc = jax.grad(f_c, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# seq-chunked CE
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunks", [2, 4])
+def test_seq_chunked_ce_matches_plain(chunks):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, d, V = 2, 16, 8, 32
+    h = jax.random.normal(ks[0], (B, S, d))
+    table = jax.random.normal(ks[1], (V, d)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    plain = softmax_cross_entropy(jnp.einsum("bsd,vd->bsv", h, table), labels)
+    chunked = seq_chunked_cross_entropy(h, table, labels, chunks=chunks, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(float(chunked), float(plain), rtol=1e-5)
+
+    g1 = jax.grad(lambda t: softmax_cross_entropy(jnp.einsum("bsd,vd->bsv", h, t), labels))(table)
+    g2 = jax.grad(
+        lambda t: seq_chunked_cross_entropy(h, t, labels, chunks=chunks, compute_dtype=jnp.float32)
+    )(table)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-6)
+
+
+def test_seq_chunked_ce_nondivisible_falls_back():
+    h = jnp.zeros((1, 7, 4))
+    table = jnp.zeros((8, 4))
+    labels = jnp.zeros((1, 7), jnp.int32)
+    out = seq_chunked_cross_entropy(h, table, labels, chunks=3, compute_dtype=jnp.float32)
+    assert np.isfinite(float(out))
+
+
+# ---------------------------------------------------------------------------
+# full-model equivalence: optimized flags vs baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-moe-30b-a3b", "zamba2-7b"])
+def test_optimized_flags_preserve_loss_and_grads(arch):
+    cfg0 = smoke_config(arch)
+    cfg1 = dataclasses.replace(
+        cfg0, flat_attention=True, loss_seq_chunks=4, moe_sort_dispatch=True, k_block=8
+    )
+    params = init_params(api.model_specs(cfg0), jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg0.vocab_size, (2, 17), np.int32)
+    )
+    l0, _ = jax.jit(api.make_loss_fn(cfg0))(params, {"tokens": tokens})
+    l1, _ = jax.jit(api.make_loss_fn(cfg1))(params, {"tokens": tokens})
+    assert abs(float(l0) - float(l1)) < 2e-3
+    g0 = jax.grad(lambda p: api.make_loss_fn(cfg0)(p, {"tokens": tokens})[0])(params)
+    g1 = jax.grad(lambda p: api.make_loss_fn(cfg1)(p, {"tokens": tokens})[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=0.1, atol=5e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch variants
+# ---------------------------------------------------------------------------
+
+def test_sorted_positions_match_onehot():
+    e = jax.random.randint(jax.random.PRNGKey(3), (3, 64), 0, 8)
+    pos_sort = _sorted_positions(e, 8)
+    onehot = jax.nn.one_hot(e, 8, dtype=jnp.int32)
+    pos_ref = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1, e[..., None], axis=-1)[..., 0]
+    np.testing.assert_array_equal(np.asarray(pos_sort), np.asarray(pos_ref))
+
+
+@pytest.mark.parametrize("cf", [0.5, 1.0, 4.0])
+def test_slot_gather_dispatch_matches_baseline(cf):
+    cfg_a = MoEConfig(d_model=16, d_ff=32, num_experts=4, top_k=2, capacity_factor=cf)
+    cfg_b = dataclasses.replace(cfg_a, sort_dispatch=True)
+    params = init_params(moe_specs(cfg_a), jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 16), jnp.float32)
+    ya, _ = moe_apply(params, x, cfg_a, compute_dtype=jnp.float32)
+    yb, _ = moe_apply(params, x, cfg_b, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), rtol=1e-5, atol=1e-6)
+    ga = jax.grad(lambda p: moe_apply(p, x, cfg_a, compute_dtype=jnp.float32)[0].sum())(params)
+    gb = jax.grad(lambda p: moe_apply(p, x, cfg_b, compute_dtype=jnp.float32)[0].sum())(params)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)

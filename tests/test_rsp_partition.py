@@ -1,0 +1,154 @@
+"""Tests for Algorithm 1 (two-stage partitioning): Definitions 2/3, Lemma 1,
+Theorem 1, and equivalence of the three implementations."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    RSPSpec,
+    empirical_cdf,
+    is_partition,
+    two_stage_partition_jax,
+    two_stage_partition_np,
+)
+from repro.data import make_higgs_like, make_nonrandom_higgs_like
+
+
+def _data(n, f=6, seed=0):
+    x, y = make_higgs_like(n, num_features=f, seed=seed)
+    return np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Definition 2: output is a partition (disjoint cover, as multisets)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P,K", [(4, 4), (2, 8), (8, 2), (1, 16)])
+def test_np_partition_is_partition(P, K):
+    data = _data(1600)
+    spec = RSPSpec(num_records=1600, num_blocks=K, num_original_blocks=P, seed=1)
+    blocks = two_stage_partition_np(data, spec)
+    assert blocks.shape == (K, 1600 // K, data.shape[1])
+    assert is_partition(blocks, data)
+
+
+def test_jax_partition_is_partition():
+    data = _data(1280)
+    blocks = two_stage_partition_jax(
+        jnp.asarray(data), jax.random.PRNGKey(3), num_blocks=8, num_original_blocks=4
+    )
+    assert blocks.shape == (8, 160, data.shape[1])
+    assert is_partition(np.asarray(blocks), data)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        RSPSpec(num_records=100, num_blocks=3, num_original_blocks=1)
+    with pytest.raises(ValueError):
+        RSPSpec(num_records=100, num_blocks=10, num_original_blocks=3)
+    with pytest.raises(ValueError):
+        # N/P = 25 not divisible by K = 10
+        RSPSpec(num_records=100, num_blocks=10, num_original_blocks=4)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1: E[F_k(x)] = F(x) -- block CDFs are unbiased for the data CDF.
+# Empirical test: average block CDF over many partition draws converges to
+# the full-data CDF at random thresholds.
+# ---------------------------------------------------------------------------
+
+def test_lemma1_block_cdf_unbiased():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(2000, 1)).astype(np.float32)
+    thresholds = np.quantile(data, [0.1, 0.25, 0.5, 0.75, 0.9])
+    full_cdf = empirical_cdf(data, thresholds)
+    accum = np.zeros_like(full_cdf)
+    draws = 40
+    for s in range(draws):
+        spec = RSPSpec(num_records=2000, num_blocks=10, num_original_blocks=10, seed=s)
+        blocks = two_stage_partition_np(data, spec)
+        accum += empirical_cdf(blocks[0], thresholds)  # block 0 of each draw
+    avg_cdf = accum / draws
+    # SE of a binomial proportion with n=200 per draw, 40 draws ~ 0.005
+    np.testing.assert_allclose(avg_cdf, full_cdf, atol=0.02)
+
+
+def test_rsp_fixes_nonrandom_data():
+    """Sequential chunking of class-sorted data gives single-class blocks;
+    the two-stage partition restores balanced label distributions."""
+    x, y = make_nonrandom_higgs_like(4000, seed=4)
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    labels = data[:, -1]
+    seq_blocks = data.reshape(10, 400, -1)
+    seq_balance = np.array([b[:, -1].mean() for b in seq_blocks])
+    assert seq_balance.max() - seq_balance.min() > 0.9  # broken: single-class blocks
+
+    spec = RSPSpec(num_records=4000, num_blocks=10, num_original_blocks=10, seed=2)
+    rsp_blocks = two_stage_partition_np(data, spec)
+    rsp_balance = np.array([b[:, -1].mean() for b in rsp_blocks])
+    assert np.all(np.abs(rsp_balance - labels.mean()) < 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: proportional unions of RSP blocks are RSP blocks of the union.
+# ---------------------------------------------------------------------------
+
+def test_theorem1_union_unbiased():
+    rng = np.random.default_rng(1)
+    a = rng.normal(0.0, 1.0, size=(1000, 1)).astype(np.float32)
+    b = rng.normal(2.0, 1.5, size=(2000, 1)).astype(np.float32)  # N1/N2 = 1/2
+    union = np.concatenate([a, b])
+    thresholds = np.quantile(union, [0.2, 0.5, 0.8])
+    full_cdf = empirical_cdf(union, thresholds)
+    accum = np.zeros_like(full_cdf)
+    draws = 40
+    for s in range(draws):
+        sa = RSPSpec(num_records=1000, num_blocks=10, num_original_blocks=10, seed=s)
+        sb = RSPSpec(num_records=2000, num_blocks=10, num_original_blocks=10, seed=1000 + s)
+        a1 = two_stage_partition_np(a, sa)[0]  # n1 = 100
+        b1 = two_stage_partition_np(b, sb)[0]  # n2 = 200 -> n1/n2 == N1/N2
+        accum += empirical_cdf(np.concatenate([a1, b1]), thresholds)
+    np.testing.assert_allclose(accum / draws, full_cdf, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Property-based: partition invariants hold for arbitrary shapes/seeds
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p_log=st.integers(0, 3),
+    k_log=st.integers(0, 3),
+    delta=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+    features=st.integers(1, 5),
+)
+def test_partition_property(p_log, k_log, delta, seed, features):
+    P, K = 2**p_log, 2**k_log
+    N = P * K * delta
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(N, features)).astype(np.float32)
+    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=P, seed=seed)
+    blocks = two_stage_partition_np(data, spec)
+    assert blocks.shape == (K, N // K, features)
+    assert is_partition(blocks, data)
+    # determinism
+    blocks2 = two_stage_partition_np(data, spec)
+    np.testing.assert_array_equal(blocks, blocks2)
+
+
+# ---------------------------------------------------------------------------
+# jax vs np implementations agree on the statistical contract
+# ---------------------------------------------------------------------------
+
+def test_jax_partition_deterministic():
+    data = jnp.asarray(_data(640))
+    k = jax.random.PRNGKey(11)
+    b1 = two_stage_partition_jax(data, k, num_blocks=4, num_original_blocks=4)
+    b2 = two_stage_partition_jax(data, k, num_blocks=4, num_original_blocks=4)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))

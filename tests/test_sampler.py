@@ -1,0 +1,96 @@
+"""Block-level sampler (Definition 4) tests: without-replacement semantics,
+determinism, O(1) resumability, host dealing + failure redistribution."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BlockSampler, deal_blocks
+
+
+def test_without_replacement_within_epoch():
+    s = BlockSampler(num_blocks=20, seed=3)
+    seen = []
+    for _ in range(4):
+        ids = s.sample(5)
+        assert len(ids) == 5
+        seen.extend(ids)
+    assert sorted(seen) == list(range(20))  # exactly one epoch, no repeats
+
+
+def test_epoch_rollover_reshuffles():
+    s = BlockSampler(num_blocks=6, seed=0)
+    e0 = s.sample(6)
+    e1 = s.sample(6)
+    assert sorted(e0) == sorted(e1) == list(range(6))
+    assert e0 != e1  # overwhelmingly likely with 6! orders
+
+
+def test_determinism_same_seed():
+    a = BlockSampler(num_blocks=50, seed=9)
+    b = BlockSampler(num_blocks=50, seed=9)
+    assert a.sample(30) == b.sample(30)
+
+
+def test_resume_equals_uninterrupted():
+    ref = BlockSampler(num_blocks=40, seed=5)
+    ref_ids = [ref.sample(7) for _ in range(8)]
+
+    live = BlockSampler(num_blocks=40, seed=5)
+    got = [live.sample(7) for _ in range(3)]
+    state = live.state_dict()  # "checkpoint"
+    resumed = BlockSampler.from_state_dict(40, state)
+    got += [resumed.sample(7) for _ in range(5)]
+    assert got == ref_ids
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(1, 200),
+    g=st.integers(1, 50),
+    batches=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sampler_property(k, g, batches, seed):
+    s = BlockSampler(num_blocks=k, seed=seed)
+    out = []
+    for _ in range(batches):
+        ids = s.sample(g)
+        assert len(ids) == g
+        assert all(0 <= i < k for i in ids)
+        out.extend(ids)
+    # within any epoch-aligned window of k draws, ids are a permutation
+    for start in range(0, (len(out) // k) * k, k):
+        window = out[start : start + k]
+        assert sorted(window) == list(range(k))
+
+
+def test_deal_blocks_covers_all():
+    a = deal_blocks(num_blocks=33, num_hosts=4, seed=1)
+    all_blocks = sorted(b for h in range(4) for b in a.blocks_for(h))
+    assert all_blocks == list(range(33))
+
+
+def test_redistribute_on_host_failure():
+    a = deal_blocks(num_blocks=32, num_hosts=4, seed=1)
+    before = {h: list(a.blocks_for(h)) for h in range(4)}
+    b = a.redistribute([2])
+    assert b.blocks_for(2) == []
+    survivors = sorted(x for h in (0, 1, 3) for x in b.blocks_for(h))
+    assert survivors == list(range(32))
+    # survivors keep their original blocks (only orphans move)
+    for h in (0, 1, 3):
+        assert set(before[h]).issubset(set(b.blocks_for(h)))
+
+
+def test_redistribute_all_failed_raises():
+    a = deal_blocks(num_blocks=8, num_hosts=2, seed=0)
+    with pytest.raises(ValueError):
+        a.redistribute([0, 1])
+
+
+def test_batches_iterator_respects_epoch():
+    s = BlockSampler(num_blocks=10, seed=2)
+    batches = list(s.batches(4))
+    assert [len(b) for b in batches] == [4, 4, 2]
+    assert sorted(sum(batches, [])) == list(range(10))

@@ -1,0 +1,97 @@
+"""Sec.-7 similarity toolkit tests: MMD, Hotelling T^2, KS, label divergence
+(Fig 2): RSP blocks are indistinguishable from the full data; sequential
+blocks of sorted data are detectably different."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    RSPSpec,
+    hotelling_t2,
+    ks_statistic,
+    label_distribution,
+    max_label_divergence,
+    median_heuristic_gamma,
+    mmd2_rbf,
+    mmd_block_vs_data,
+    two_stage_partition_np,
+)
+from repro.data import make_higgs_like, make_nonrandom_higgs_like
+
+
+def _blocks_and_data(shuffle: bool):
+    maker = make_higgs_like if shuffle else make_nonrandom_higgs_like
+    x, y = maker(8000, seed=3, class_sep=2.0)
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    return data
+
+
+def test_mmd_rsp_block_small_sequential_block_large():
+    data = _blocks_and_data(shuffle=False)  # class-sorted
+    seq_block = data[:800]  # first sequential chunk: all class 0
+    spec = RSPSpec(num_records=8000, num_blocks=10, num_original_blocks=10, seed=1)
+    rsp_block = two_stage_partition_np(data, spec)[0]
+    mmd_seq = mmd_block_vs_data(seq_block, data, seed=0)
+    mmd_rsp = mmd_block_vs_data(rsp_block, data, seed=0)
+    assert mmd_rsp < mmd_seq / 5
+    assert abs(mmd_rsp) < 5e-3
+
+
+def test_mmd_identical_distributions_near_zero():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(400, 8)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(400, 8)).astype(np.float32))
+    gamma = median_heuristic_gamma(np.asarray(x))
+    assert abs(float(mmd2_rbf(x, y, jnp.asarray(gamma)))) < 0.01
+
+
+def test_mmd_shifted_distributions_large():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(400, 8)).astype(np.float32))
+    y = jnp.asarray((rng.normal(size=(400, 8)) + 2.0).astype(np.float32))
+    gamma = median_heuristic_gamma(np.asarray(x))
+    assert float(mmd2_rbf(x, y, jnp.asarray(gamma))) > 0.1
+
+
+def test_hotelling_t2_detects_mean_shift():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(300, 5))
+    y_same = rng.normal(size=(300, 5))
+    y_shift = rng.normal(size=(300, 5)) + 0.5
+    _, _, p_same = hotelling_t2(x, y_same)
+    _, _, p_shift = hotelling_t2(x, y_shift)
+    assert p_same > 0.01       # fail to reject H0
+    assert p_shift < 1e-6      # reject decisively
+
+
+def test_hotelling_t2_rsp_block_vs_data():
+    data = _blocks_and_data(shuffle=True)
+    spec = RSPSpec(num_records=8000, num_blocks=10, num_original_blocks=10, seed=4)
+    block = two_stage_partition_np(data, spec)[3]
+    _, _, p = hotelling_t2(block[:, :-1], data[:500, :-1])
+    assert p > 0.001  # block mean indistinguishable from data mean
+
+
+def test_ks_statistic_basics():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=5000)
+    b = rng.normal(size=5000)
+    c = rng.normal(loc=1.0, size=5000)
+    assert ks_statistic(a, b) < 0.05
+    assert ks_statistic(a, c) > 0.3
+
+
+def test_label_distribution_fig2a():
+    """Fig 2a: label frequencies in RSP blocks track the whole data set."""
+    x, y = make_nonrandom_higgs_like(6000, seed=5)
+    data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
+    spec = RSPSpec(num_records=6000, num_blocks=10, num_original_blocks=10, seed=2)
+    blocks = two_stage_partition_np(data, spec)
+    full = label_distribution(y, 2)
+    for k in range(10):
+        div = max_label_divergence(blocks[k][:, -1], y, 2)
+        assert div < 0.06, f"block {k} diverges {div}"
+    # sequential chunking of the sorted data fails the same check
+    seq = data[:600]
+    assert max_label_divergence(seq[:, -1], y, 2) > 0.4
+    assert np.isclose(full.sum(), 1.0)

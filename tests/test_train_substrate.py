@@ -1,0 +1,213 @@
+"""Training substrate tests: optimizer, checkpoint/restart fault tolerance,
+serve engine, end-to-end LM training on an RSP corpus."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ckpt
+from repro.configs import smoke_config
+from repro.core import RSPSpec, two_stage_partition_np
+from repro.data import BlockSource, RSPLoader
+from repro.data.synthetic import make_token_corpus
+from repro.models import api
+from repro.models.common import init_params
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.serve.engine import EnsembleServer, ServeConfig, Server
+from repro.train import TrainConfig, Trainer, init_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0], jnp.float32)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    p = params
+    for _ in range(200):
+        g = jax.grad(loss)(p)
+        state, p, _ = adamw_update(state, g, cfg, compute_dtype=jnp.float32)
+    assert float(loss(p)) < 1e-3
+
+
+def test_adamw_grad_clip_applies():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=1e-3, grad_clip=1.0)
+    huge = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    _, _, stats = adamw_update(state, huge, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_schedule_shapes():
+    s0 = float(warmup_cosine(0, warmup_steps=10, total_steps=100))
+    s10 = float(warmup_cosine(10, warmup_steps=10, total_steps=100))
+    s100 = float(warmup_cosine(100, warmup_steps=10, total_steps=100))
+    assert s0 == 0.0 and s10 == pytest.approx(1.0) and s100 == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+
+def _toy_state():
+    return {
+        "params": {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "opt": {"m": jnp.zeros((2, 3)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _toy_state()
+    ckpt.save(str(tmp_path), 10, state, extra={"loader": {"seed": 1}})
+    like = jax.eval_shape(lambda: _toy_state())
+    got, extra = ckpt.restore(str(tmp_path), 10, like)
+    np.testing.assert_array_equal(np.asarray(got["params"]["a"]), np.asarray(state["params"]["a"]))
+    assert extra["loader"]["seed"] == 1
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_checkpoint_keep_last(tmp_path):
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, _toy_state(), keep_last=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, _toy_state())
+    bad = jax.eval_shape(lambda: {"params": {"a": jnp.zeros((3, 3))},
+                                  "opt": {"m": jnp.zeros((2, 3)), "step": jnp.asarray(0)}})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), keep_last=2)
+    acp.save(5, _toy_state(), extra={"x": 1})
+    acp.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: train a small LM from an RSP corpus, kill it, resume
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rsp_token_loader_factory():
+    corpus = make_token_corpus(256, 17, vocab_size=256, seed=0)   # records = sequences
+    spec = RSPSpec(num_records=256, num_blocks=16, num_original_blocks=16, seed=1)
+    blocks = two_stage_partition_np(corpus, spec)
+
+    def make(seed=3):
+        return RSPLoader(BlockSource(blocks=blocks), batch_size=8, seed=seed)
+
+    return make
+
+
+def _trainer(tmp_path, loader, total_steps, ckpt_every=5):
+    cfg = smoke_config("llama3.2-1b")
+    tc = TrainConfig(
+        total_steps=total_steps, warmup_steps=2, checkpoint_every=ckpt_every,
+        log_every=2, seed=0,
+    )
+    return Trainer(
+        cfg, AdamWConfig(lr=1e-2), tc, loader, str(tmp_path / "ckpt"),
+        batch_transform=lambda b: {"tokens": jnp.asarray(b, jnp.int32)},
+    )
+
+
+def test_training_reduces_loss(tmp_path, rsp_token_loader_factory):
+    trainer = _trainer(tmp_path, rsp_token_loader_factory(), total_steps=20)
+    trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_restart_resumes_exactly(tmp_path, rsp_token_loader_factory):
+    """Preempted-at-5 + resumed run must reproduce the uninterrupted run
+    BIT-EXACTLY (same schedule horizon, same data order, exact state
+    restore)."""
+    # uninterrupted run
+    t_ref = _trainer(tmp_path / "ref", rsp_token_loader_factory(), total_steps=10, ckpt_every=100)
+    state_ref = t_ref.run()
+
+    # preempted run: killed after 5 steps (checkpoint at 5), then resumed
+    t_a = _trainer(tmp_path / "resume", rsp_token_loader_factory(), total_steps=10, ckpt_every=100)
+    t_a.run(stop_after_steps=5)
+    assert ckpt.latest_step(str(tmp_path / "resume" / "ckpt")) == 5
+
+    t_b = _trainer(tmp_path / "resume", rsp_token_loader_factory(), total_steps=10, ckpt_every=100)
+    state_b = t_b.run()
+
+    for ref, got in zip(jax.tree.leaves(state_ref["opt"]["master"]), jax.tree.leaves(state_b["opt"]["master"])):
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    assert int(state_b["opt"]["step"]) == int(state_ref["opt"]["step"]) == 10
+
+
+def test_schedule_horizon_mismatch_detectable(tmp_path, rsp_token_loader_factory):
+    """A run checkpointed under a different total_steps (schedule horizon)
+    diverges -- documents why the horizon is part of the train config."""
+    t_short = _trainer(tmp_path / "short", rsp_token_loader_factory(), total_steps=5, ckpt_every=5)
+    s_short = t_short.run()
+    t_long = _trainer(tmp_path / "long", rsp_token_loader_factory(), total_steps=10, ckpt_every=100)
+    s_long = t_long.run(stop_after_steps=5)
+    diffs = [
+        float(jnp.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max())
+        for a, b in zip(jax.tree.leaves(s_short["opt"]["master"]), jax.tree.leaves(s_long["opt"]["master"]))
+    ]
+    assert max(diffs) > 0.0
+
+
+def test_microbatch_accumulation_matches_full_batch(tmp_path, rsp_token_loader_factory):
+    cfg = smoke_config("qwen2-0.5b")
+    loader = rsp_token_loader_factory()
+    batch = {"tokens": jnp.asarray(loader.next_batch(), jnp.int32)}
+
+    tc_full = TrainConfig(total_steps=1, warmup_steps=0, microbatch=0)
+    tc_micro = TrainConfig(total_steps=1, warmup_steps=0, microbatch=4)
+    opt = AdamWConfig(lr=1e-2)
+    state = init_state(cfg, seed=0)
+    step_full = jax.jit(make_train_step(cfg, opt, tc_full))
+    step_micro = jax.jit(make_train_step(cfg, opt, tc_micro))
+    s1, m1 = step_full(state, batch)
+    s2, m2 = step_micro(state, batch)
+    # same data, same update (microbatching only changes reduction order)
+    for a, b in zip(jax.tree.leaves(s1["opt"]["master"]), jax.tree.leaves(s2["opt"]["master"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_server_greedy_generation():
+    cfg = smoke_config("llama3.2-1b")
+    params = init_params(api.model_specs(cfg), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    server = Server(cfg, params)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 5), np.int32))
+    out = server.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 9)
+    np.testing.assert_array_equal(out[:, :5], np.asarray(prompts))
+
+
+def test_ensemble_server_runs():
+    cfg = smoke_config("qwen2-0.5b")
+    k = 3
+    stacked = jax.vmap(lambda key: init_params(api.model_specs(cfg), key))(
+        jax.random.split(jax.random.PRNGKey(0), k)
+    )
+    stacked = jax.tree.map(lambda p: p.astype(jnp.float32), stacked)
+    server = EnsembleServer(cfg, stacked)
+    prompts = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 4), np.int32))
+    out = server.generate(prompts, max_new_tokens=3)
+    assert out.shape == (2, 7)
