@@ -1,9 +1,10 @@
 """End-to-end driver: asymptotic ensemble learning on a HIGGS-like corpus
-(the paper's Fig. 6/7 experiment) with an on-disk RSP store.
+(the paper's Fig. 6/7 experiment) with an on-disk RSP store, through the
+``repro.rsp`` facade.
 
-The corpus is materialized as an RSP once; analysis then touches only the
-sampled blocks -- including after a simulated node failure, where the lost
-host's blocks are re-dealt to the survivors (Theorem 1).
+The corpus is materialized as an RSP once (``ds.save``); analysis then
+touches only the sampled blocks -- including after a simulated node failure,
+where the lost host's blocks are re-dealt to the survivors (Theorem 1).
 
     PYTHONPATH=src python examples/ensemble_higgs.py [--records 100000]
 """
@@ -16,16 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    Ensemble,
-    RSPSpec,
-    RSPStore,
-    make_logreg,
-    make_mlp,
-    train_base_models_vmapped,
-    two_stage_partition_np,
-)
-from repro.core.sampler import BlockSampler, deal_blocks
+from repro import rsp
 from repro.data import make_higgs_like
 
 
@@ -44,41 +36,31 @@ def main():
 
     # --- create + store the RSP (done once per corpus) ---------------------
     t0 = time.time()
-    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=1)
-    blocks = two_stage_partition_np(data, spec)
-    store = RSPStore(tempfile.mkdtemp(prefix="rsp_"))
-    store.write_partition(blocks, spec)
-    print(f"[partition+store] {N} records -> {K} blocks in {time.time() - t0:.2f}s "
-          f"at {store.root}")
+    root = tempfile.mkdtemp(prefix="rsp_")
+    rsp.partition(data, blocks=K, seed=1, num_classes=2).save(root)
+    ds = rsp.open(root)   # lazy, store-backed from here on
+    print(f"[partition+store] {N} records -> {K} blocks "
+          f"(backend={ds.backend!r}) in {time.time() - t0:.2f}s at {root}")
 
     # --- deal blocks to 4 hosts, then lose one -----------------------------
-    assign = deal_blocks(K, num_hosts=4, seed=3)
-    assign = assign.redistribute([2])
+    assign = ds.deal(num_hosts=4, seed=3).redistribute([2])
     print(f"[elastic] host 2 failed; survivors now hold "
           f"{[len(assign.blocks_for(h)) for h in (0, 1, 3)]} blocks")
 
     # --- Algorithm 2 over the stored RSP -----------------------------------
     F = x.shape[1]
-    learner = (make_logreg(F, 2, steps=200, lr=0.5) if args.learner == "logreg"
-               else make_mlp(F, 2, hidden=32, steps=300, lr=0.05))
-    sampler = BlockSampler(K, seed=9)
-    ensemble = Ensemble(learner)
-    key = jax.random.PRNGKey(0)
-    best, stall = 0.0, 0
+    learner = (rsp.make_logreg(F, 2, steps=200, lr=0.5) if args.learner == "logreg"
+               else rsp.make_mlp(F, 2, hidden=32, steps=300, lr=0.05))
     t0 = time.time()
-    while sampler.remaining_in_epoch() > 0 and stall < 2:
-        ids = sampler.sample(min(args.batch_blocks, sampler.remaining_in_epoch()))
-        batch = store.load_blocks(ids)
-        bx = jnp.asarray(batch[:, :, :-1])
-        by = jnp.asarray(batch[:, :, -1].astype(np.int32))
-        key, sub = jax.random.split(key)
-        params = train_base_models_vmapped(learner, sub, bx, by)
-        ensemble.add_stacked(params, len(ids))
-        acc = ensemble.accuracy(xe, ye)
-        print(f"  batch {ids} -> ensemble acc {acc:.4f} "
-              f"({ensemble.num_models}/{K} blocks, {time.time() - t0:.1f}s)")
-        stall = stall + 1 if acc - best < 1e-3 else 0
-        best = max(best, acc)
+    ensemble, hist = ds.ensemble(
+        learner, eval_x=xe, eval_y=ye, g=args.batch_blocks, seed=9,
+        improvement_tol=1e-3, patience=2,
+    )
+    ens_s = time.time() - t0
+    for used, acc in zip(hist.blocks_used, hist.accuracy):
+        print(f"  ensemble acc {acc:.4f} ({used}/{K} blocks)")
+    print(f"[ensemble] trained in {ens_s:.1f}s, loading only sampled blocks")
+    best = max(hist.accuracy)
 
     # --- the full-data single model for comparison (Fig. 6 dotted line) ----
     t0 = time.time()

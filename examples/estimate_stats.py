@@ -1,21 +1,14 @@
-"""Block-level statistics estimation (paper Sec. 8, Figs. 3/4): watch the
-estimates converge to the full-data truth as blocks are added, with the
-plateau detector stopping the scan early.
+"""Block-level statistics estimation (paper Sec. 8, Figs. 3/4) through the
+``repro.rsp`` facade: watch the estimates converge to the full-data truth as
+blocks are added, with the plateau detector stopping the scan early.
 
     PYTHONPATH=src python examples/estimate_stats.py
 """
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    BlockLevelEstimator,
-    RSPSpec,
-    block_histogram,
-    quantile_from_histogram,
-    two_stage_partition_np,
-)
-from repro.core.similarity import hotelling_t2, mmd_block_vs_data
+from repro import rsp
+from repro.core import block_histogram, quantile_from_histogram
 from repro.data import make_higgs_like
 
 
@@ -23,15 +16,16 @@ def main():
     N, K = 200_000, 100
     x, y = make_higgs_like(N, seed=4)
     data = np.concatenate([x, y[:, None].astype(np.float32)], axis=1)
-    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=7)
-    blocks = two_stage_partition_np(data, spec)
+    ds = rsp.partition(data, blocks=K, seed=7, num_classes=2)
     truth_mean = data.mean(0)
     truth_std = data.std(0, ddof=1)
 
-    est = BlockLevelEstimator()
+    # streaming fold over a block-level sample, with convergence history
+    est = rsp.BlockLevelEstimator()
+    order = ds.sample(K, seed=0)
     print("blocks  max|mean err|  max|std err|  converged?")
-    for g in range(1, K + 1):
-        est.update(jnp.asarray(blocks[g - 1]))
+    for g, k in enumerate(order, start=1):
+        est.update(ds[k])
         conv = est.converged(rel_tol=1e-3)
         if g in (1, 2, 5, 10, 20) or conv:
             em = np.abs(est.stats.mean - truth_mean).max()
@@ -41,13 +35,18 @@ def main():
             print(f"-> plateau after {g}/{K} blocks ({100 * g / K:.0f}% of the data)")
             break
 
+    # the same estimate from the partition-time sketches: no block reads at all
+    sk = ds.moments(g=20, seed=0)
+    print(f"sketch-only moments from 20 blocks: "
+          f"max|mean err| {np.abs(sk.mean - truth_mean).max():.6f}")
+
     # distribution-level checks on one block (Sec. 7 toolkit)
-    mmd = mmd_block_vs_data(blocks[3], data, seed=0)
-    t2, f, p = hotelling_t2(blocks[3][:, :-1], data[:3000, :-1])
-    print(f"block 3 vs data: MMD^2={mmd:.2e}, Hotelling T2 p-value={p:.3f}")
+    mmd = ds.similarity(3, metric="mmd", seed=0)
+    ks = ds.similarity(3, metric="ks", feature=0)
+    print(f"block 3 vs data: MMD^2={mmd:.2e}, KS={ks:.4f}")
 
     # quantiles via combinable histograms
-    h = sum(block_histogram(blocks[k], bins=256, lo=-8, hi=8) for k in range(5))
+    h = sum(block_histogram(ds[k], bins=256, lo=-8, hi=8) for k in range(5))
     q = quantile_from_histogram(h, [0.5], lo=-8, hi=8)[:, 0]
     true_q = np.quantile(data, 0.5, axis=0)
     print(f"median from 5 blocks: max abs err {np.abs(q - true_q).max():.4f}")

@@ -1,24 +1,17 @@
-"""Quickstart: the RSP data model in ~60 lines.
+"""Quickstart: the RSP data model in ~40 lines, through the ``repro.rsp``
+facade.
 
 Creates an RSP from a (deliberately class-sorted!) synthetic data set,
-draws a block-level sample, estimates statistics from it, and trains a
-small ensemble -- the paper's workflow end to end.
+draws a block-level sample, estimates statistics from the partition-time
+block sketches, and trains a small ensemble -- the paper's workflow end
+to end via one object.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    BlockLevelEstimator,
-    BlockSampler,
-    RSPSpec,
-    asymptotic_ensemble_learn,
-    make_logreg,
-    two_stage_partition_np,
-)
-from repro.core.similarity import max_label_divergence
+from repro import rsp
 from repro.data import make_nonrandom_higgs_like
 
 
@@ -26,35 +19,30 @@ def main():
     # 1. a "big" data set, stored in the worst possible order (sorted by class)
     N, K = 40_000, 40
     x, y = make_nonrandom_higgs_like(N + 8_000, seed=0, class_sep=1.5)
-    xe, ye = jnp.asarray(x[N:]), jnp.asarray(y[N:])
+    xe, ye = x[N:], y[N:].astype(np.int32)
     data = np.concatenate([x[:N], y[:N, None].astype(np.float32)], axis=1)
 
-    # 2. two-stage partitioning (Algorithm 1): every block becomes a random sample
-    spec = RSPSpec(num_records=N, num_blocks=K, num_original_blocks=K, seed=1)
-    blocks = two_stage_partition_np(data, spec)
-    worst = max(max_label_divergence(blocks[k][:, -1], data[:, -1], 2) for k in range(K))
-    print(f"RSP created: {K} blocks x {spec.block_size} records; "
-          f"worst label divergence {worst:.4f} (sequential chunking: 0.50)")
+    # 2. two-stage partitioning (Algorithm 1): every block becomes a random
+    #    sample.  backend="auto" dispatches through the registry (shard_map
+    #    with a mesh, the Pallas kernel on TPU, numpy streaming otherwise).
+    ds = rsp.partition(data, blocks=K, seed=1, backend="auto", num_classes=2)
+    print(f"RSP created: {ds.num_blocks} blocks x {ds.block_size} records "
+          f"via backend={ds.backend!r}; worst label divergence "
+          f"{ds.label_divergence():.4f} (sequential chunking: 0.50)")
 
     # 3. block-level sampling (Definition 4): no scan, no shuffle
-    sampler = BlockSampler(K, seed=7)
-    sample = sampler.sample(5)
+    sample = ds.sample(5, seed=7)
     print(f"block-level sample: {sample}")
 
-    # 4. estimate statistics from the sample alone (Sec. 8)
-    est = BlockLevelEstimator()
-    for b in sample:
-        est.update(jnp.asarray(blocks[b][:, :-1]))
-    err = float(np.abs(est.stats.mean - data[:, :-1].mean(0)).max())
+    # 4. estimate statistics from the sample alone (Sec. 8) -- the moments
+    #    combine partition-time block sketches, touching no block data
+    stats = ds.moments(ids=sample)
+    err = float(np.abs(stats.mean[:-1] - data[:, :-1].mean(0)).max())
     print(f"mean estimated from 5/{K} blocks; max abs error {err:.5f}")
 
     # 5. asymptotic ensemble learning (Algorithm 2)
-    bx = jnp.asarray(blocks[:, :, :-1])
-    by = jnp.asarray(blocks[:, :, -1].astype(np.int32))
-    learner = make_logreg(bx.shape[-1], 2, steps=200, lr=0.5)
-    ens, hist = asymptotic_ensemble_learn(
-        bx, by, learner=learner, eval_x=xe, eval_y=ye, g=5, seed=0
-    )
+    learner = rsp.make_logreg(data.shape[1] - 1, 2, steps=200, lr=0.5)
+    ens, hist = ds.ensemble(learner, eval_x=xe, eval_y=ye, g=5, seed=0)
     print("ensemble accuracy per batch:", [round(a, 4) for a in hist.accuracy])
     print(f"final: {hist.accuracy[-1]:.4f} using {ens.num_models}/{K} blocks")
 

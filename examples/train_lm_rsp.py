@@ -20,9 +20,8 @@ import tempfile
 
 import jax.numpy as jnp
 
+from repro import rsp
 from repro.configs import ARCHS
-from repro.core import RSPSpec, two_stage_partition_np
-from repro.data import BlockSource, RSPLoader
 from repro.data.synthetic import make_token_corpus
 from repro.optim import AdamWConfig
 from repro.train import TrainConfig, Trainer
@@ -56,10 +55,10 @@ def main():
     # --- corpus -> RSP blocks of sequences ---------------------------------
     n_seqs, K = 512, 16   # N/(P*K) must be integral: 512/(16*16) = 2
     corpus = make_token_corpus(n_seqs, seq + 1, vocab_size=cfg.vocab_size, seed=0, drift=True)
-    spec = RSPSpec(num_records=n_seqs, num_blocks=K, num_original_blocks=K, seed=1)
-    blocks = two_stage_partition_np(corpus, spec)
-    loader = RSPLoader(BlockSource(blocks=blocks), batch_size=batch, seed=5)
-    print(f"corpus: {n_seqs} sequences x {seq + 1} tokens -> {K} RSP blocks")
+    # int token data: backend="auto" routes to the numpy streaming path
+    ds = rsp.partition(corpus, blocks=K, seed=1, summaries=False)
+    print(f"corpus: {n_seqs} sequences x {seq + 1} tokens -> {K} RSP blocks "
+          f"(backend={ds.backend!r})")
 
     ckpt_dir = tempfile.mkdtemp(prefix="rsp_lm_ckpt_")
     tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
@@ -68,7 +67,7 @@ def main():
     def make_trainer():
         return Trainer(
             cfg, AdamWConfig(lr=3e-3), tc,
-            RSPLoader(BlockSource(blocks=blocks), batch_size=batch, seed=5),
+            ds.loader(batch_size=batch, seed=5),
             ckpt_dir,
             batch_transform=lambda b: {"tokens": jnp.asarray(b, jnp.int32)},
         )

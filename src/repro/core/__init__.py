@@ -1,14 +1,39 @@
 """repro.core -- the paper's contribution: the Random Sample Partition model.
 
-Public API:
-    RSPSpec, SamplerState, BlockDescriptor          (types)
-    two_stage_partition_np / _jax, distributed_rsp_partition  (Algorithm 1)
-    BlockSampler, deal_blocks, HostAssignment       (Definition 4)
-    BlockLevelEstimator, block_moments, combine_moments       (Sec. 8)
-    BaseLearner, make_logreg, make_mlp, Ensemble,
-    asymptotic_ensemble_learn                       (Algorithm 2, Sec. 9)
-    mmd2_rbf, hotelling_t2, ks_statistic            (Sec. 7)
-    RSPStore                                        (stored RSP)
+This is the *low-level* layer.  New code should use the ``repro.rsp`` facade
+(``rsp.partition(...) -> RSPDataset``), which wires these pieces into one
+chainable pipeline and dispatches partitioning through a backend registry.
+The free functions below remain supported as the stable substrate the facade
+is built on, but direct wiring of them is a deprecation path: prefer
+
+    repro.rsp.partition / RSPDataset        over  two_stage_partition_* +
+                                                  RSPStore + BlockSampler glue
+    RSPDataset.save / rsp.open              over  RSPStore.write_partition /
+                                                  load_block
+    RSPDataset.sample / .moments /          over  BlockSampler +
+        .estimate / .ensemble / .similarity       BlockLevelEstimator +
+                                                  asymptotic_ensemble_learn +
+                                                  mmd/ks call sites
+
+API map (paper reference in parentheses):
+
+  types        RSPSpec, SamplerState, BlockDescriptor
+  partition    two_stage_partition_np   -- streaming numpy (Algorithm 1)
+               two_stage_partition_jax  -- jit in-memory (Algorithm 1)
+               distributed_rsp_partition-- shard_map + all_to_all (Algorithm 1)
+               randomize_dataset, is_partition, empirical_cdf (Defs. 2/3)
+  sampling     BlockSampler, deal_blocks, HostAssignment (Definition 4)
+  estimation   BlockLevelEstimator, MomentStats, block_moments,
+               combine_moments, batched_block_moments, block_histogram,
+               quantile_from_histogram (Sec. 8)
+  ensemble     BaseLearner, make_logreg, make_mlp, Ensemble,
+               train_base_models_vmapped, asymptotic_ensemble_learn,
+               ensemble_vs_single_model (Sec. 9, Algorithm 2)
+  similarity   mmd2_rbf, mmd_block_vs_data, median_heuristic_gamma,
+               hotelling_t2, ks_statistic, label_distribution,
+               max_label_divergence (Sec. 7)
+  storage      RSPStore (stored RSP; manifest cache + atomic block writes)
+  monitoring   DriftMonitor, DriftReport
 """
 
 from repro.core.types import BlockDescriptor, RSPSpec, SamplerState

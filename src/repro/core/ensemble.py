@@ -181,8 +181,8 @@ class EnsembleHistory:
 
 
 def asymptotic_ensemble_learn(
-    blocks_x: Array,
-    blocks_y: Array,
+    blocks_x: Array | None = None,
+    blocks_y: Array | None = None,
     *,
     learner: BaseLearner,
     eval_x: Array,
@@ -192,13 +192,30 @@ def asymptotic_ensemble_learn(
     improvement_tol: float = 1e-3,
     patience: int = 2,
     max_batches: int | None = None,
+    num_blocks: int | None = None,
+    fetch_blocks: Callable[[list[int]], tuple[Array, Array]] | None = None,
 ) -> tuple[Ensemble, EnsembleHistory]:
     """Algorithm 2: batches of g blocks -> vmapped base models -> ensemble
     update -> evaluation; stop on plateau or block exhaustion.
 
-    ``blocks_x``: [K, n, F] stacked RSP blocks; ``blocks_y``: [K, n].
+    Either pass stacked in-memory blocks (``blocks_x``: [K, n, F],
+    ``blocks_y``: [K, n]) or a lazy source (``fetch_blocks(ids) ->
+    (xs, ys)`` with ``num_blocks``) so each batch loads only its sampled
+    blocks -- the paper's touch-only-the-sample property for stored RSPs.
     """
-    K = blocks_x.shape[0]
+    if fetch_blocks is None:
+        if blocks_x is None or blocks_y is None:
+            raise ValueError("need blocks_x/blocks_y or fetch_blocks + num_blocks")
+        K = blocks_x.shape[0]
+
+        def fetch_blocks(ids: list[int]) -> tuple[Array, Array]:
+            idx = jnp.asarray(ids)
+            return blocks_x[idx], blocks_y[idx]
+
+    else:
+        if num_blocks is None:
+            raise ValueError("fetch_blocks needs num_blocks")
+        K = num_blocks
     sampler = BlockSampler(K, seed=seed)
     ensemble = Ensemble(learner)
     history = EnsembleHistory()
@@ -210,9 +227,8 @@ def asymptotic_ensemble_learn(
             break
         ids = sampler.sample(min(g, sampler.remaining_in_epoch()))
         key, sub = jax.random.split(key)
-        params = train_base_models_vmapped(
-            learner, sub, blocks_x[jnp.asarray(ids)], blocks_y[jnp.asarray(ids)]
-        )
+        bx, by = fetch_blocks(ids)
+        params = train_base_models_vmapped(learner, sub, bx, by)
         ensemble.add_stacked(params, len(ids))
         acc = ensemble.accuracy(eval_x, eval_y)
         history.blocks_used.append(ensemble.num_models)

@@ -26,6 +26,11 @@ import numpy as np
 
 from repro.core.types import RSPSpec
 
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # jax < 0.6: shard_map still lives in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 Array = jax.Array
 
 
@@ -168,7 +173,7 @@ def distributed_rsp_partition(
         sub = jax.lax.all_to_all(sub[None], axis, split_axis=1, concat_axis=0)[:, 0]
         return sub.reshape(N // D, *tail)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(in_spec, jax.sharding.PartitionSpec()),

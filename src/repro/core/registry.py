@@ -4,7 +4,15 @@ samples are served by path lookup (no scan of the corpus).
 
 Layout:
     <root>/manifest.json          RSPSpec + block descriptors + checksums
+                                  (+ optional per-block summaries and meta)
     <root>/block_00042.npy        one RSP data block per file (mmap-readable)
+
+The parsed manifest (and the descriptors built from it) is cached per store
+instance and invalidated when the manifest file's mtime changes, so repeated
+``load_block(verify=True)`` calls don't re-read and re-parse JSON.
+
+Prefer the ``repro.rsp.RSPDataset`` facade (``ds.save(path)`` /
+``rsp.open(path)``) for new code; it plumbs this store underneath.
 """
 
 from __future__ import annotations
@@ -13,7 +21,6 @@ import dataclasses
 import hashlib
 import json
 import os
-import tempfile
 from typing import Iterable
 
 import numpy as np
@@ -36,19 +43,38 @@ class RSPStore:
 
     def __init__(self, root: str):
         self.root = root
+        self._cached_manifest: dict | None = None
+        self._cached_descriptors: list[BlockDescriptor] | None = None
+        self._cached_stat: tuple[int, int] | None = None
 
     # -- write --------------------------------------------------------------
-    def write_partition(self, blocks: np.ndarray | Iterable[np.ndarray], spec: RSPSpec) -> None:
+    def write_partition(
+        self,
+        blocks: np.ndarray | Iterable[np.ndarray],
+        spec: RSPSpec,
+        *,
+        summaries: list[dict] | None = None,
+        meta: dict | None = None,
+    ) -> None:
+        """Materialize blocks + manifest.  ``summaries`` (per-block sketch
+        dicts, see repro.rsp.summaries) and ``meta`` (free-form dataset
+        metadata) ride along in the manifest when provided.
+
+        Single-writer per store root: temp names are deterministic
+        (``<block>.tmp.npy`` -> one ``os.replace``), so concurrent writers
+        to the same root could publish each other's half-written temps.
+        Readers are always safe -- blocks and manifest appear atomically."""
         os.makedirs(self.root, exist_ok=True)
         descriptors: list[BlockDescriptor] = []
         for k, block in enumerate(blocks):
             block = np.asarray(block)
             path = self._block_path(k)
-            # atomic write: temp file + rename
-            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-            os.close(fd)
+            # atomic write: deterministic temp name, one replace.  The .npy
+            # suffix stops np.save from appending its own, so the temp file
+            # written is exactly the file renamed.
+            tmp = path + ".tmp.npy"
             np.save(tmp, block, allow_pickle=False)
-            os.replace(tmp + ".npy" if os.path.exists(tmp + ".npy") else tmp, path)
+            os.replace(tmp, path)
             descriptors.append(
                 BlockDescriptor(
                     block_id=k,
@@ -57,23 +83,54 @@ class RSPStore:
                     checksum=_checksum(block),
                 )
             )
+        # drop stale blocks from any previous, larger partition in this root
+        # so derived paths beyond the new K cannot serve old data
+        for stray in os.listdir(self.root):
+            if stray.startswith("block_") and stray.endswith(".npy"):
+                try:
+                    k = int(stray[len("block_"):-len(".npy")])
+                except ValueError:
+                    continue
+                if k >= len(descriptors):
+                    os.remove(os.path.join(self.root, stray))
         manifest = {
             "spec": json.loads(spec.to_json()),
             "blocks": [dataclasses.asdict(d) for d in descriptors],
         }
+        if summaries is not None:
+            manifest["summaries"] = summaries
+        if meta is not None:
+            manifest["meta"] = meta
         tmp_manifest = os.path.join(self.root, self.MANIFEST + ".tmp")
         with open(tmp_manifest, "w") as f:
             json.dump(manifest, f)
         os.replace(tmp_manifest, os.path.join(self.root, self.MANIFEST))
+        self._invalidate()
 
     # -- read ---------------------------------------------------------------
     def spec(self) -> RSPSpec:
         return RSPSpec.from_json(json.dumps(self._manifest()["spec"]))
 
     def descriptors(self) -> list[BlockDescriptor]:
-        return [BlockDescriptor(**d) for d in self._manifest()["blocks"]]
+        self._manifest()  # refresh cache if the file changed
+        if self._cached_descriptors is None:
+            self._cached_descriptors = [
+                BlockDescriptor(**d) for d in self._cached_manifest["blocks"]
+            ]
+        return self._cached_descriptors
+
+    def summaries(self) -> list[dict] | None:
+        """Per-block summary sketches from the manifest (None if absent)."""
+        return self._manifest().get("summaries")
+
+    def meta(self) -> dict:
+        """Free-form dataset metadata from the manifest ({} if absent)."""
+        return self._manifest().get("meta", {})
 
     def load_block(self, block_id: int, *, mmap: bool = True, verify: bool = False) -> np.ndarray:
+        n = self.num_blocks()
+        if not 0 <= block_id < n:
+            raise IndexError(f"block {block_id} out of range [0, {n})")
         path = self._block_path(block_id)
         arr = np.load(path, mmap_mode="r" if mmap else None, allow_pickle=False)
         if verify:
@@ -90,9 +147,24 @@ class RSPStore:
         return len(self._manifest()["blocks"])
 
     # -- internals ----------------------------------------------------------
+    def _invalidate(self) -> None:
+        self._cached_manifest = None
+        self._cached_descriptors = None
+        self._cached_stat = None
+
     def _manifest(self) -> dict:
-        with open(os.path.join(self.root, self.MANIFEST)) as f:
-            return json.load(f)
+        """Parsed manifest, cached until the file changes.  The key is
+        (mtime_ns, size) so rewrites within one coarse-mtime tick are still
+        caught when the payload length differs."""
+        path = os.path.join(self.root, self.MANIFEST)
+        st = os.stat(path)
+        key = (st.st_mtime_ns, st.st_size)
+        if self._cached_manifest is None or key != self._cached_stat:
+            with open(path) as f:
+                self._cached_manifest = json.load(f)
+            self._cached_descriptors = None
+            self._cached_stat = key
+        return self._cached_manifest
 
     def _block_path(self, block_id: int) -> str:
         return os.path.join(self.root, f"block_{block_id:05d}.npy")

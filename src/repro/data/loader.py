@@ -22,21 +22,34 @@ from repro.core.sampler import BlockSampler
 
 
 class BlockSource:
-    """Uniform interface over in-memory stacked blocks or an RSPStore."""
+    """Uniform interface over in-memory stacked blocks, an RSPStore, or an
+    ``repro.rsp.RSPDataset`` (anything with ``num_blocks`` / ``block(k)``)."""
 
-    def __init__(self, blocks: np.ndarray | None = None, store: RSPStore | None = None):
-        if (blocks is None) == (store is None):
-            raise ValueError("provide exactly one of blocks / store")
+    def __init__(
+        self,
+        blocks: np.ndarray | None = None,
+        store: RSPStore | None = None,
+        dataset=None,
+    ):
+        if sum(x is not None for x in (blocks, store, dataset)) != 1:
+            raise ValueError("provide exactly one of blocks / store / dataset")
         self._blocks = blocks
         self._store = store
+        self._dataset = dataset
 
     @property
     def num_blocks(self) -> int:
-        return self._blocks.shape[0] if self._blocks is not None else self._store.num_blocks()
+        if self._blocks is not None:
+            return self._blocks.shape[0]
+        if self._dataset is not None:
+            return self._dataset.num_blocks
+        return self._store.num_blocks()
 
     def load(self, block_id: int) -> np.ndarray:
         if self._blocks is not None:
             return np.asarray(self._blocks[block_id])
+        if self._dataset is not None:
+            return np.asarray(self._dataset.block(block_id))
         return np.asarray(self._store.load_block(block_id))
 
 

@@ -1,0 +1,87 @@
+"""repro.rsp -- the unified RSP pipeline facade.
+
+One import surface for the paper's whole workflow::
+
+    from repro import rsp
+
+    ds = rsp.partition(data, blocks=64, seed=1, backend="auto", num_classes=2)
+    ds.save("/data/corpus.rsp")                  # stored RSP (manifest + blocks)
+    ds = rsp.open("/data/corpus.rsp")            # lazy re-open
+    ids = ds.sample(5, seed=7)                   # block-level sample (Def. 4)
+    stats = ds.moments(g=5)                      # Sec. 8, from block sketches
+    ens, hist = ds.ensemble(rsp.make_logreg(28, 2), eval_x=xe, eval_y=ye, g=5)
+    mmd = ds.similarity(3, metric="mmd")         # Sec. 7 diagnostics
+
+``partition`` dispatches through a backend registry (numpy streaming, jit
+jax, shard_map collective, Pallas kernel) with capability predicates;
+``backend="auto"`` selects shard_map when a mesh is supplied, Pallas when
+the kernel's shape constraints hold on a TPU host, and numpy streaming
+otherwise.
+
+The free functions in ``repro.core`` (``two_stage_partition_*``,
+``RSPStore``, ``BlockSampler``, ...) remain as the stable low-level layer
+this facade is built on, but new code should start here.
+"""
+
+from repro.core.ensemble import (
+    BaseLearner,
+    Ensemble,
+    EnsembleHistory,
+    make_logreg,
+    make_mlp,
+)
+from repro.core.estimators import BlockLevelEstimator, MomentStats
+from repro.core.sampler import BlockSampler, HostAssignment
+from repro.core.types import RSPSpec
+from repro.rsp.backends import (
+    AUTO,
+    PartitionBackend,
+    PartitionRequest,
+    available_backends,
+    backend_eligibility,
+    get_backend,
+    register_backend,
+    run_partition,
+    select_backend,
+)
+from repro.rsp.dataset import RSPDataset
+from repro.rsp.summaries import (
+    BlockSummary,
+    combine_summaries,
+    max_divergence_from_summaries,
+    summarize_block,
+    summarize_blocks,
+)
+
+partition = RSPDataset.partition
+open = RSPDataset.open  # noqa: A001 -- facade verb, mirrors gzip.open
+
+__all__ = [
+    "AUTO",
+    "BaseLearner",
+    "BlockLevelEstimator",
+    "BlockSampler",
+    "BlockSummary",
+    "Ensemble",
+    "EnsembleHistory",
+    "HostAssignment",
+    "MomentStats",
+    "PartitionBackend",
+    "PartitionRequest",
+    "RSPDataset",
+    "RSPSpec",
+    "available_backends",
+    "backend_eligibility",
+    "combine_summaries",
+    "get_backend",
+    "make_logreg",
+    "make_mlp",
+    "max_divergence_from_summaries",
+    "open",
+    "partition",
+    "register_backend",
+    "run_partition",
+    "select_backend",
+    "summarize_block",
+    "summarize_blocks",
+]

@@ -1,0 +1,269 @@
+"""Partition backend registry behind ``rsp.partition(..., backend=...)``.
+
+Each backend runs Algorithm 1 (two-stage RSP partitioning) through a
+different execution substrate and declares a *capability predicate* that
+says whether it can serve a given request:
+
+    np        -- paper-faithful numpy streaming path; always eligible, the
+                 fallback for out-of-core / non-float / non-2D data.
+    jax       -- jit'd in-memory path (vmapped permutation + reshape).
+    shard_map -- one collective program over a device mesh (all_to_all);
+                 requires a mesh with P = K = mesh size.
+    pallas    -- the ``rsp_shuffle`` TPU kernel: hierarchical tile shuffle
+                 per original block with the delta-slice dealing expressed
+                 as DMA scheduling; requires 2-D floating-point data.
+
+``backend="auto"`` selects shard_map when a mesh is supplied, Pallas when
+the kernel's shape constraints hold *and* a TPU is attached (off-TPU the
+kernel would run in interpret mode, slower than numpy), and the numpy
+streaming path otherwise (highest ``auto_priority`` whose predicates pass).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import (
+    distributed_rsp_partition,
+    two_stage_partition_jax,
+    two_stage_partition_np,
+)
+from repro.core.types import RSPSpec
+from repro.kernels.rsp_shuffle.ops import rsp_randomize_block
+
+AUTO = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionRequest:
+    """Everything a backend needs to decide eligibility and to run."""
+
+    data: Any                                   # array-like [N, ...]
+    spec: RSPSpec
+    mesh: jax.sharding.Mesh | None = None
+    mesh_axis: str = "data"
+    permute_assignment: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionBackend:
+    """A named Algorithm-1 implementation with a capability predicate.
+
+    ``supports`` returns ``None`` when the backend *can* serve the request
+    and a human-readable refusal reason otherwise; it gates explicit
+    ``backend=<name>`` dispatch.  ``auto_eligible`` (optional) adds a
+    preference predicate consulted only by ``backend="auto"`` -- a backend
+    that would run but poorly (e.g. an interpret-mode kernel off-TPU) can
+    decline auto-selection while remaining explicitly requestable.  ``run``
+    returns the stacked RSP blocks [K, n, ...] as a numpy array.
+    """
+
+    name: str
+    capabilities: frozenset[str]
+    supports: Callable[[PartitionRequest], str | None]
+    run: Callable[[PartitionRequest], np.ndarray]
+    auto_priority: int
+    auto_eligible: Callable[[PartitionRequest], str | None] | None = None
+
+
+_REGISTRY: dict[str, PartitionBackend] = {}
+
+
+def register_backend(backend: PartitionBackend) -> PartitionBackend:
+    if backend.name == AUTO:
+        raise ValueError(f"'{AUTO}' is reserved for automatic selection")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> PartitionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def backend_eligibility(request: PartitionRequest) -> dict[str, str | None]:
+    """Map backend name -> None (eligible) or the refusal reason."""
+    return {name: b.supports(request) for name, b in _REGISTRY.items()}
+
+
+def select_backend(request: PartitionRequest) -> PartitionBackend:
+    """The ``backend="auto"`` rule: highest-priority eligible backend."""
+    ranked = sorted(_REGISTRY.values(), key=lambda b: -b.auto_priority)
+    reasons: list[str] = []
+    for b in ranked:
+        reason = b.supports(request)
+        if reason is None and b.auto_eligible is not None:
+            reason = b.auto_eligible(request)
+        if reason is None:
+            return b
+        reasons.append(f"{b.name}: {reason}")
+    raise ValueError("no backend can serve this request; " + "; ".join(reasons))
+
+
+def run_partition(
+    request: PartitionRequest, backend: str = AUTO
+) -> tuple[np.ndarray, str]:
+    """Dispatch a partition request; returns (blocks [K, n, ...], backend)."""
+    b = select_backend(request) if backend == AUTO else get_backend(backend)
+    if backend != AUTO:
+        reason = b.supports(request)
+        if reason is not None:
+            raise ValueError(f"backend {b.name!r} cannot serve this request: {reason}")
+    return b.run(request), b.name
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+def _supports_np(req: PartitionRequest) -> str | None:
+    return None  # the streaming fallback serves everything the spec admits
+
+
+def _run_np(req: PartitionRequest) -> np.ndarray:
+    return two_stage_partition_np(
+        np.asarray(req.data), req.spec, permute_assignment=req.permute_assignment
+    )
+
+
+def _supports_jax(req: PartitionRequest) -> str | None:
+    return None  # in-memory jit path; spec divisibility is validated upstream
+
+
+def _run_jax(req: PartitionRequest) -> np.ndarray:
+    out = two_stage_partition_jax(
+        jnp.asarray(req.data),
+        jax.random.PRNGKey(req.spec.seed),
+        num_blocks=req.spec.num_blocks,
+        num_original_blocks=req.spec.num_original_blocks,
+        permute_assignment=req.permute_assignment,
+    )
+    return np.asarray(out)
+
+
+def _supports_shard_map(req: PartitionRequest) -> str | None:
+    if req.mesh is None:
+        return "requires a device mesh"
+    if req.mesh_axis not in req.mesh.shape:
+        return f"mesh has no axis {req.mesh_axis!r}"
+    d = req.mesh.shape[req.mesh_axis]
+    if req.spec.num_blocks != d or req.spec.num_original_blocks != d:
+        return (
+            f"needs P = K = mesh size ({d}), got P={req.spec.num_original_blocks}"
+            f" K={req.spec.num_blocks}"
+        )
+    if req.spec.num_records % (d * d) != 0:
+        return f"N={req.spec.num_records} not divisible by mesh_size^2={d * d}"
+    return None
+
+
+def _run_shard_map(req: PartitionRequest) -> np.ndarray:
+    out = distributed_rsp_partition(
+        jnp.asarray(req.data),
+        jax.random.PRNGKey(req.spec.seed),
+        req.mesh,
+        axis=req.mesh_axis,
+        permute_assignment=req.permute_assignment,
+    )
+    return np.asarray(out)
+
+
+def _supports_pallas(req: PartitionRequest) -> str | None:
+    shape = np.shape(req.data)
+    if len(shape) != 2:
+        return f"kernel needs 2-D [records, features] data, got shape {shape}"
+    dtype = getattr(req.data, "dtype", None)
+    if dtype is None or not np.issubdtype(np.dtype(dtype), np.floating):
+        return f"kernel shuffles via an MXU matmul and needs a float dtype, got {dtype}"
+    if not req.permute_assignment:
+        return "sub-block assignment permutation is intrinsic to the tile dealing"
+    return None
+
+
+def _auto_pallas(req: PartitionRequest) -> str | None:
+    # off-TPU the kernel runs in interpret mode, far slower than the numpy
+    # path -- don't win auto-selection there (explicit backend="pallas"
+    # still works, e.g. for kernel plumbing tests).
+    if jax.default_backend() != "tpu":
+        return "interpret-mode off-TPU is slower than np (request it explicitly)"
+    return None
+
+
+def _run_pallas(req: PartitionRequest) -> np.ndarray:
+    """Algorithm 1 with the randomize step on the ``rsp_shuffle`` kernel.
+
+    Per original block, ``tile_rows = delta`` makes the kernel's tile
+    permutation *be* the sub-block dealing: output tile k of block i is the
+    (intra-shuffled) sub-block destined for RSP block k.  Lemma 1 applies at
+    slice granularity (see kernels.rsp_shuffle.kernel).
+    """
+    spec = req.spec
+    P, K, delta = spec.num_original_blocks, spec.num_blocks, spec.slice_size
+    x = jnp.asarray(req.data)
+    R, F = spec.original_block_size, x.shape[1]
+    interpret = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(spec.seed)
+    sub = jnp.stack(
+        [
+            rsp_randomize_block(
+                x[i * R : (i + 1) * R],
+                jax.random.fold_in(key, i),
+                tile_rows=delta,
+                interpret=interpret,
+            ).reshape(K, delta, F)
+            for i in range(P)
+        ]
+    )  # [P, K, delta, F]
+    return np.asarray(sub.transpose(1, 0, 2, 3).reshape(K, P * delta, F))
+
+
+register_backend(
+    PartitionBackend(
+        name="np",
+        capabilities=frozenset({"streaming", "out-of-core"}),
+        supports=_supports_np,
+        run=_run_np,
+        auto_priority=20,
+    )
+)
+register_backend(
+    PartitionBackend(
+        name="jax",
+        capabilities=frozenset({"in-memory", "jit"}),
+        supports=_supports_jax,
+        run=_run_jax,
+        auto_priority=10,
+    )
+)
+register_backend(
+    PartitionBackend(
+        name="shard_map",
+        capabilities=frozenset({"in-memory", "collective", "mesh"}),
+        supports=_supports_shard_map,
+        run=_run_shard_map,
+        auto_priority=40,
+    )
+)
+register_backend(
+    PartitionBackend(
+        name="pallas",
+        capabilities=frozenset({"in-memory", "kernel"}),
+        supports=_supports_pallas,
+        run=_run_pallas,
+        auto_priority=30,
+        auto_eligible=_auto_pallas,
+    )
+)

@@ -1,0 +1,382 @@
+"""``RSPDataset`` -- the one-object facade over the RSP pipeline.
+
+The paper's workflow is a single conceptual pipeline: randomize, partition
+into RSP blocks (Algorithm 1), store, block-sample (Definition 4), then
+estimate (Sec. 8) or ensemble-learn (Sec. 9, Algorithm 2).  This class
+exposes that pipeline as chainable methods over one carrier object:
+
+    ds = rsp.partition(data, blocks=64, seed=1, num_classes=2)
+    ds.save("/data/corpus.rsp")
+    stats = ds.moments(g=5)                       # from per-block sketches
+    ens, hist = ds.ensemble(make_logreg(28, 2), eval_x=xe, eval_y=ye, g=5)
+
+Construction dispatches through the backend registry (numpy streaming, jit
+jax, shard_map collective, Pallas kernel); the resulting dataset carries its
+``RSPSpec``, lazy block access (in-memory or store-backed), and per-block
+summary statistics computed once at partition time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.ensemble import (
+    BaseLearner,
+    Ensemble,
+    EnsembleHistory,
+    asymptotic_ensemble_learn,
+)
+from repro.core.estimators import BlockLevelEstimator, MomentStats
+from repro.core.registry import RSPStore
+from repro.core.sampler import BlockSampler, HostAssignment, deal_blocks
+from repro.core.similarity import ks_statistic, max_label_divergence, mmd_block_vs_data
+from repro.core.types import RSPSpec
+from repro.rsp.backends import AUTO, PartitionRequest, run_partition
+from repro.rsp.summaries import (
+    BlockSummary,
+    combine_summaries,
+    max_divergence_from_summaries,
+    summarize_blocks,
+)
+
+
+class RSPDataset:
+    """A materialized Random Sample Partition with chainable analysis ops."""
+
+    def __init__(
+        self,
+        spec: RSPSpec,
+        *,
+        blocks: np.ndarray | None = None,
+        store: RSPStore | None = None,
+        backend: str = "np",
+        summaries: list[BlockSummary] | None = None,
+        num_classes: int | None = None,
+        label_column: int = -1,
+    ):
+        if blocks is None and store is None:
+            raise ValueError("provide in-memory blocks and/or a store")
+        self.spec = spec
+        self.backend = backend
+        self.num_classes = num_classes
+        self.label_column = label_column
+        self._blocks = None if blocks is None else np.asarray(blocks)
+        self._store = store
+        self._summaries = summaries
+
+    # ------------------------------------------------------------------
+    # Construction: Algorithm 1 through the backend registry
+    # ------------------------------------------------------------------
+    @classmethod
+    def partition(
+        cls,
+        data: Any,
+        blocks: int,
+        *,
+        original_blocks: int | None = None,
+        seed: int = 0,
+        backend: str = AUTO,
+        mesh: jax.sharding.Mesh | None = None,
+        mesh_axis: str = "data",
+        permute_assignment: bool = True,
+        num_classes: int | None = None,
+        label_column: int = -1,
+        summaries: bool = True,
+    ) -> "RSPDataset":
+        """Partition ``data`` [N, ...] into an RSP of ``blocks`` blocks.
+
+        ``backend="auto"`` picks shard_map when ``mesh`` is supplied, the
+        Pallas kernel when its shape constraints hold on a TPU host, and
+        the numpy streaming path otherwise; pass an explicit name to force
+        one.
+        ``num_classes`` marks column ``label_column`` as a class label so
+        label histograms join the per-block summaries and ``.ensemble`` /
+        ``.label_divergence`` know how to split records.
+        """
+        n = np.shape(data)[0]
+        spec = RSPSpec(
+            num_records=n,
+            num_blocks=blocks,
+            num_original_blocks=blocks if original_blocks is None else original_blocks,
+            record_shape=tuple(np.shape(data)[1:]),
+            dtype=str(np.dtype(getattr(data, "dtype", np.float32))),
+            seed=seed,
+        )
+        request = PartitionRequest(
+            data=data,
+            spec=spec,
+            mesh=mesh,
+            mesh_axis=mesh_axis,
+            permute_assignment=permute_assignment,
+        )
+        out, chosen = run_partition(request, backend=backend)
+        ds = cls(
+            spec,
+            blocks=out,
+            backend=chosen,
+            num_classes=num_classes,
+            label_column=label_column,
+        )
+        if summaries:
+            ds._summaries = ds._compute_summaries()
+        return ds
+
+    # ------------------------------------------------------------------
+    # Block access (lazy when store-backed)
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.spec.num_blocks
+
+    @property
+    def block_size(self) -> int:
+        return self.spec.block_size
+
+    def __len__(self) -> int:
+        return self.num_blocks
+
+    def block(self, block_id: int) -> np.ndarray:
+        if not 0 <= block_id < self.num_blocks:
+            raise IndexError(f"block {block_id} out of range [0, {self.num_blocks})")
+        if self._blocks is not None:
+            return self._blocks[block_id]
+        return np.asarray(self._store.load_block(block_id))
+
+    def __getitem__(self, block_id: int) -> np.ndarray:
+        return self.block(block_id)
+
+    def take(self, block_ids: Sequence[int]) -> np.ndarray:
+        """Stack the given blocks -> [g, n, ...]."""
+        return np.stack([self.block(b) for b in block_ids])
+
+    def stacked(self) -> np.ndarray:
+        """All blocks as one [K, n, ...] array (loads everything)."""
+        if self._blocks is None:
+            self._blocks = np.stack(
+                [np.asarray(self._store.load_block(k)) for k in range(self.num_blocks)]
+            )
+        return self._blocks
+
+    # ------------------------------------------------------------------
+    # Per-block summary statistics (partition-time sketches)
+    # ------------------------------------------------------------------
+    @property
+    def summaries(self) -> list[BlockSummary]:
+        if self._summaries is None:
+            self._summaries = self._compute_summaries()
+        return self._summaries
+
+    def _compute_summaries(self) -> list[BlockSummary]:
+        label_column = self.label_column if self.num_classes is not None else None
+        return summarize_blocks(
+            (self.block(k) for k in range(self.num_blocks)),
+            label_column=label_column,
+            num_classes=self.num_classes,
+        )
+
+    # ------------------------------------------------------------------
+    # Storage (re-plumbs RSPStore)
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> "RSPDataset":
+        """Materialize to ``path`` (blocks + manifest with sketches); chainable."""
+        store = RSPStore(path)
+        store.write_partition(
+            self.stacked(),
+            self.spec,
+            summaries=[s.to_dict() for s in self.summaries],
+            meta={
+                "backend": self.backend,
+                "num_classes": self.num_classes,
+                "label_column": self.label_column,
+            },
+        )
+        self._store = store
+        return self
+
+    @classmethod
+    def open(cls, path: str) -> "RSPDataset":
+        """Open a stored RSP; blocks load lazily, sketches from the manifest."""
+        store = RSPStore(path)
+        meta = store.meta()
+        raw = store.summaries()
+        return cls(
+            store.spec(),
+            store=store,
+            backend=str(meta.get("backend", "np")),
+            summaries=None if raw is None else [BlockSummary.from_dict(d) for d in raw],
+            num_classes=meta.get("num_classes"),
+            label_column=int(meta.get("label_column", -1)),
+        )
+
+    @property
+    def store(self) -> RSPStore | None:
+        return self._store
+
+    # ------------------------------------------------------------------
+    # Block-level sampling (Definition 4)
+    # ------------------------------------------------------------------
+    def sampler(self, seed: int = 0) -> BlockSampler:
+        return BlockSampler(self.num_blocks, seed=seed)
+
+    def sample(self, g: int, *, seed: int = 0) -> list[int]:
+        """One block-level sample: g block ids without replacement."""
+        return self.sampler(seed).sample(g)
+
+    def deal(self, num_hosts: int, *, seed: int = 0, epoch: int = 0) -> HostAssignment:
+        """Deal block ids across hosts for one epoch (multi-host training)."""
+        return deal_blocks(self.num_blocks, num_hosts, seed=seed, epoch=epoch)
+
+    # ------------------------------------------------------------------
+    # Estimation (Sec. 8)
+    # ------------------------------------------------------------------
+    def moments(
+        self, g: int | None = None, *, seed: int = 0, ids: Sequence[int] | None = None
+    ) -> MomentStats:
+        """Corpus moments estimated from a block-level sample of ``g`` blocks
+        (``ids`` if given, all blocks when both are None) -- combined from the
+        partition-time sketches, so no block data is read."""
+        if ids is None:
+            ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
+        summaries = self.summaries
+        return combine_summaries([summaries[k] for k in ids])
+
+    def estimator(
+        self, g: int | None = None, *, seed: int = 0, ids: Sequence[int] | None = None
+    ) -> BlockLevelEstimator:
+        """A ``BlockLevelEstimator`` fed with a block-level sample -- use when
+        the convergence history / plateau detector is wanted."""
+        if ids is None:
+            ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
+        est = BlockLevelEstimator()
+        for k in ids:
+            est.update(self.block(k))
+        return est
+
+    def estimate(
+        self, fn: Callable[[np.ndarray], Any], g: int | None = None, *, seed: int = 0
+    ) -> Any:
+        """Block-level estimate of an arbitrary statistic: mean of ``fn(block)``
+        over a block-level sample (each block is a random sample, so the
+        average is an unbiased estimate of the corpus statistic)."""
+        ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
+        return np.mean([np.asarray(fn(self.block(k))) for k in ids], axis=0)
+
+    # ------------------------------------------------------------------
+    # Ensemble learning (Sec. 9, Algorithm 2)
+    # ------------------------------------------------------------------
+    def ensemble(
+        self,
+        learner: BaseLearner,
+        *,
+        eval_x: Any,
+        eval_y: Any,
+        g: int = 5,
+        batches: int | None = None,
+        seed: int = 0,
+        improvement_tol: float = 1e-3,
+        patience: int = 2,
+    ) -> tuple[Ensemble, EnsembleHistory]:
+        """Asymptotic ensemble learning over block-level samples.  Records
+        are split into features/label via ``label_column`` (set
+        ``num_classes`` at partition time).  Blocks are fetched lazily per
+        batch, so a store-backed dataset only reads the sampled blocks."""
+        import jax.numpy as jnp
+
+        if self.num_classes is None:
+            raise ValueError("ensemble needs num_classes (set it at partition time)")
+
+        def fetch(ids):
+            xs, ys = self._split_xy(self.take(ids))
+            return jnp.asarray(xs), jnp.asarray(ys)
+
+        return asymptotic_ensemble_learn(
+            learner=learner,
+            eval_x=jnp.asarray(eval_x),
+            eval_y=jnp.asarray(eval_y),
+            g=g,
+            seed=seed,
+            improvement_tol=improvement_tol,
+            patience=patience,
+            max_batches=batches,
+            num_blocks=self.num_blocks,
+            fetch_blocks=fetch,
+        )
+
+    def _split_xy(self, stacked: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        col = self.label_column % stacked.shape[-1]
+        ys = stacked[..., col].astype(np.int32)
+        xs = np.delete(stacked, col, axis=-1)
+        return xs, ys
+
+    # ------------------------------------------------------------------
+    # Similarity / diagnostics (Sec. 7)
+    # ------------------------------------------------------------------
+    def similarity(
+        self,
+        block_id: int,
+        *,
+        metric: str = "mmd",
+        feature: int = 0,
+        max_points: int = 1024,
+        seed: int = 0,
+    ) -> float:
+        """How close block ``block_id`` is to the full corpus.
+
+        ``metric="mmd"``: unbiased MMD^2 (RBF, median-heuristic bandwidth);
+        ``metric="ks"``: two-sample KS statistic on one feature column;
+        ``metric="labels"``: L-inf label-distribution distance (needs
+        ``num_classes``).
+
+        The corpus reference is the in-memory partition when available;
+        for store-backed datasets it is a bounded block-level sample
+        (valid by Lemma 1 -- each block is a random sample), so the full
+        corpus is never materialized.
+        """
+        block = self.block(block_id)
+        corpus = self._corpus_reference(max(max_points, 4096), seed=seed)
+        if metric == "mmd":
+            return mmd_block_vs_data(block, corpus, max_points=max_points, seed=seed)
+        if metric == "ks":
+            return ks_statistic(block[:, feature], corpus[:, feature])
+        if metric == "labels":
+            if self.num_classes is None:
+                raise ValueError("metric='labels' needs num_classes")
+            col = self.label_column
+            return max_label_divergence(block[:, col], corpus[:, col], self.num_classes)
+        raise ValueError(f"unknown metric {metric!r} (mmd | ks | labels)")
+
+    def _corpus_reference(self, max_records: int, *, seed: int = 0) -> np.ndarray:
+        """Flat [M, ...] corpus sample for similarity comparisons: the whole
+        partition when in memory, else >= ``max_records`` records from a
+        block-level sample (no full-corpus load)."""
+        if self._blocks is not None:
+            return self._blocks.reshape(-1, *self.spec.record_shape)
+        g = min(self.num_blocks, max(1, -(-max_records // self.block_size)))
+        ids = self.sample(g, seed=seed)
+        return self.take(ids).reshape(-1, *self.spec.record_shape)
+
+    def label_divergence(self) -> float:
+        """Worst block-vs-corpus label L-inf distance, from the sketches alone."""
+        return max_divergence_from_summaries(self.summaries)
+
+    # ------------------------------------------------------------------
+    # Training pipeline
+    # ------------------------------------------------------------------
+    def loader(self, batch_size: int, *, seed: int = 0, **kwargs):
+        """An ``RSPLoader`` over this dataset (block-level sampled batches)."""
+        from repro.data.loader import BlockSource, RSPLoader
+
+        return RSPLoader(
+            BlockSource(dataset=self), batch_size=batch_size, seed=seed, **kwargs
+        )
+
+    def __repr__(self) -> str:
+        src = "memory" if self._blocks is not None else f"store:{self._store.root}"
+        return (
+            f"RSPDataset(K={self.num_blocks}, n={self.block_size}, "
+            f"record_shape={self.spec.record_shape}, backend={self.backend!r}, "
+            f"source={src})"
+        )

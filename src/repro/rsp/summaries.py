@@ -1,0 +1,154 @@
+"""Per-block summary statistics, computed once at partition time.
+
+In the style of partition-selection summary stats (Rong et al., 2020), every
+RSP block carries a small sketch -- record count, per-feature moments and
+extrema, and (for labelled data) a label histogram -- written alongside the
+block at partition/store time.  Downstream consumers then answer questions
+like "estimate the corpus mean from g blocks" or "how far is block k's label
+distribution from the corpus" without touching block data at all: the
+sketches combine exactly (Chan-style parallel moments, histogram addition).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.estimators import MomentStats, combine_moments
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSummary:
+    """Sketch of one RSP block: moments + extrema (+ label histogram)."""
+
+    block_id: int
+    count: int
+    mean: np.ndarray                 # [F] per flattened feature
+    m2: np.ndarray                   # [F] sum of squared deviations
+    min: np.ndarray                  # [F]
+    max: np.ndarray                  # [F]
+    label_hist: np.ndarray | None = None   # [num_classes] counts, optional
+
+    @property
+    def variance(self) -> np.ndarray:
+        return self.m2 / max(self.count - 1.0, 1.0)
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.sqrt(self.variance)
+
+    @property
+    def label_distribution(self) -> np.ndarray:
+        if self.label_hist is None:
+            raise ValueError(f"block {self.block_id} has no label histogram")
+        return self.label_hist / max(self.label_hist.sum(), 1)
+
+    def moments(self) -> MomentStats:
+        return MomentStats(
+            count=float(self.count),
+            mean=self.mean.copy(),
+            m2=self.m2.copy(),
+            min=self.min.copy(),
+            max=self.max.copy(),
+        )
+
+    # -- manifest (de)serialization ----------------------------------------
+    def to_dict(self) -> dict:
+        d = {
+            "block_id": self.block_id,
+            "count": self.count,
+            "mean": self.mean.tolist(),
+            "m2": self.m2.tolist(),
+            "min": self.min.tolist(),
+            "max": self.max.tolist(),
+        }
+        if self.label_hist is not None:
+            d["label_hist"] = self.label_hist.tolist()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BlockSummary":
+        hist = d.get("label_hist")
+        return cls(
+            block_id=int(d["block_id"]),
+            count=int(d["count"]),
+            mean=np.asarray(d["mean"], dtype=np.float64),
+            m2=np.asarray(d["m2"], dtype=np.float64),
+            min=np.asarray(d["min"], dtype=np.float64),
+            max=np.asarray(d["max"], dtype=np.float64),
+            label_hist=None if hist is None else np.asarray(hist, dtype=np.int64),
+        )
+
+
+def summarize_block(
+    block: np.ndarray,
+    block_id: int,
+    *,
+    label_column: int | None = None,
+    num_classes: int | None = None,
+) -> BlockSummary:
+    """Compute one block's sketch.  ``label_column`` (with ``num_classes``)
+    additionally records the label histogram of that column."""
+    x = np.asarray(block, dtype=np.float64).reshape(block.shape[0], -1)
+    mean = x.mean(axis=0)
+    m2 = ((x - mean) ** 2).sum(axis=0)
+    hist = None
+    if label_column is not None and num_classes is not None:
+        labels = x[:, label_column]
+        ilabels = labels.astype(np.int64)
+        if (
+            np.any(ilabels != labels)
+            or ilabels.min(initial=0) < 0
+            or ilabels.max(initial=0) >= num_classes
+        ):
+            raise ValueError(
+                f"block {block_id}: label column {label_column} has values outside"
+                f" 0..{num_classes - 1} (wrong label_column or num_classes?)"
+            )
+        hist = np.bincount(ilabels, minlength=num_classes)
+    return BlockSummary(
+        block_id=block_id,
+        count=int(x.shape[0]),
+        mean=mean,
+        m2=m2,
+        min=x.min(axis=0),
+        max=x.max(axis=0),
+        label_hist=hist,
+    )
+
+
+def summarize_blocks(
+    blocks: Iterable[np.ndarray],
+    *,
+    label_column: int | None = None,
+    num_classes: int | None = None,
+) -> list[BlockSummary]:
+    return [
+        summarize_block(b, k, label_column=label_column, num_classes=num_classes)
+        for k, b in enumerate(blocks)
+    ]
+
+
+def combine_summaries(summaries: Sequence[BlockSummary]) -> MomentStats:
+    """Exact corpus-level moments from block sketches alone (no data reads)."""
+    if not summaries:
+        raise ValueError("need at least one block summary")
+    acc = summaries[0].moments()
+    for s in summaries[1:]:
+        acc = combine_moments(acc, s.moments())
+    return acc
+
+
+def max_divergence_from_summaries(summaries: Sequence[BlockSummary]) -> float:
+    """Worst L-inf distance between any block's label distribution and the
+    corpus label distribution, computed purely from the sketches (Fig. 2a)."""
+    hists = [s.label_hist for s in summaries]
+    if any(h is None for h in hists):
+        raise ValueError("all blocks need label histograms")
+    total = np.sum(hists, axis=0)
+    corpus = total / max(total.sum(), 1)
+    return float(
+        max(np.max(np.abs(s.label_distribution - corpus)) for s in summaries)
+    )

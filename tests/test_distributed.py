@@ -139,13 +139,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # --- compressed psum over a 'pod' axis -----------------------------------
 from repro.distributed.compression import compressed_psum
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.6: shard_map still lives in experimental
+    from jax.experimental.shard_map import shard_map
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
 x = jax.random.normal(jax.random.PRNGKey(0), (2, 256))
 
 def f(x):
     return compressed_psum(x, "pod")
 
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None)))(x)
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None)))(x)
 want = jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape)
 err = float(jnp.abs(np.asarray(y) - want).max())
 rel = err / float(jnp.abs(want).max())
@@ -164,7 +169,7 @@ state = init_state(cfg, seed=0)
 d = tempfile.mkdtemp()
 ckpt.save(d, 3, state, extra={})
 
-mesh_big = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_big = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
 rules_big = default_rules(mesh_big, num_kv_heads=cfg.num_kv_heads)
 like = jax.eval_shape(lambda: init_state(cfg, 0))
 restored, _ = restore_for_mesh(d, 3, cfg, rules_big, like={"params": like["params"], "opt": like["opt"]})

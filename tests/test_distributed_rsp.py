@@ -18,7 +18,7 @@ from repro.core import distributed_rsp_partition, is_partition, RSPSpec, two_sta
 from repro.core.similarity import max_label_divergence
 from repro.data import make_nonrandom_higgs_like
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(8), ("data",))
 
 # class-sorted (worst case) data
 x, y = make_nonrandom_higgs_like(6400, seed=1)

@@ -46,9 +46,12 @@ def test_dryrun_rsp_partition_program(tmp_path):
     proc = _run_cell(["--arch", "rsp-partition", "--out", str(tmp_path)])
     assert proc.returncode == 0, proc.stderr[-3000:]
     r = json.load(open(tmp_path / "rsp-partition_single.json"))
-    # pure data movement: no matmul flops, bytes ~ slab size
+    # pure data movement: no matmul flops; moved bytes at least read+write of
+    # the per-device slab (1024 records x 4097 tokens x 4 B).  The absolute
+    # count depends on the jax version's lowering, so anchor to the slab.
+    slab = 1024 * 4097 * 4
     assert r["analysis"]["flops"] == 0
-    assert r["analysis"]["bytes"] > 1e8
+    assert r["analysis"]["bytes"] > 2 * slab
 
 
 def test_hlo_analyzer_scales_loop_bodies():

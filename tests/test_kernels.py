@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip below; the rest of the module runs
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -60,24 +65,31 @@ def test_flash_grouped_input_layout():
     )
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    s_pow=st.integers(4, 7),
-    d=st.sampled_from([8, 16, 32]),
-    hkv=st.integers(1, 4),
-    g=st.integers(1, 4),
-    causal=st.booleans(),
-    seed=st.integers(0, 1000),
-)
-def test_flash_property(s_pow, d, hkv, g, causal, seed):
-    S = 2**s_pow
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(ks[0], (1, hkv * g, S, d))
-    k = jax.random.normal(ks[1], (1, hkv, S, d))
-    v = jax.random.normal(ks[2], (1, hkv, S, d))
-    got = fa_ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
-    want = flash_attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s_pow=st.integers(4, 7),
+        d=st.sampled_from([8, 16, 32]),
+        hkv=st.integers(1, 4),
+        g=st.integers(1, 4),
+        causal=st.booleans(),
+        seed=st.integers(0, 1000),
+    )
+    def test_flash_property(s_pow, d, hkv, g, causal, seed):
+        S = 2**s_pow
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (1, hkv * g, S, d))
+        k = jax.random.normal(ks[1], (1, hkv, S, d))
+        v = jax.random.normal(ks[2], (1, hkv, S, d))
+        got = fa_ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+        want = flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+else:
+
+    def test_flash_property():
+        pytest.importorskip("hypothesis")
 
 
 # ---------------------------------------------------------------------------
@@ -183,17 +195,24 @@ def test_rsp_randomize_block_is_permutation():
     assert not np.array_equal(np.asarray(out), np.asarray(x))
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    tiles=st.integers(2, 8),
-    t_rows=st.sampled_from([4, 8, 16]),
-    d=st.integers(1, 8),
-    seed=st.integers(0, 10_000),
-)
-def test_rsp_shuffle_property(tiles, t_rows, d, seed):
-    R = tiles * t_rows
-    x = jax.random.normal(jax.random.PRNGKey(seed), (R, d))
-    tp, ip = rs_ops.make_permutations(jax.random.PRNGKey(seed + 1), tiles, t_rows)
-    got = rs_ops.rsp_shuffle(x, tp, ip, tile_rows=t_rows)
-    want = rsp_shuffle_ref(x, tp, ip, tile_rows=t_rows)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        tiles=st.integers(2, 8),
+        t_rows=st.sampled_from([4, 8, 16]),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+    )
+    def test_rsp_shuffle_property(tiles, t_rows, d, seed):
+        R = tiles * t_rows
+        x = jax.random.normal(jax.random.PRNGKey(seed), (R, d))
+        tp, ip = rs_ops.make_permutations(jax.random.PRNGKey(seed + 1), tiles, t_rows)
+        got = rs_ops.rsp_shuffle(x, tp, ip, tile_rows=t_rows)
+        want = rsp_shuffle_ref(x, tp, ip, tile_rows=t_rows)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+else:
+
+    def test_rsp_shuffle_property():
+        pytest.importorskip("hypothesis")

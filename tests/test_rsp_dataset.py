@@ -1,0 +1,322 @@
+"""RSPDataset facade tests: backend registry dispatch + auto-selection,
+cross-backend partition equivalence, save/open round-trips, partition-time
+summary sketches, and the RSPStore manifest cache / atomic writes."""
+
+import glob
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import rsp
+from repro.core import RSPSpec, RSPStore, is_partition
+from repro.core.partition import two_stage_partition_np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip below; the rest of the module runs
+    HAVE_HYPOTHESIS = False
+
+
+def _data(n, f=5, seed=0, num_classes=2):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f - 1)).astype(np.float32)
+    y = (rng.random(n) < 0.4).astype(np.float32)
+    return np.concatenate([x, y[:, None]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence: every backend yields a valid, deterministic partition
+# of the same record multiset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["np", "jax", "pallas"])
+@pytest.mark.parametrize("P,K", [(8, 8), (4, 8)])
+def test_backend_is_partition_and_deterministic(backend, P, K):
+    data = _data(1600)
+    kw = dict(blocks=K, original_blocks=P, seed=11, backend=backend)
+    ds = rsp.partition(data, **kw)
+    assert ds.backend == backend
+    assert ds.stacked().shape == (K, 1600 // K, data.shape[1])
+    assert is_partition(ds.stacked(), data)
+    ds2 = rsp.partition(data, **kw)
+    np.testing.assert_array_equal(ds.stacked(), ds2.stacked())
+
+
+def test_backends_share_record_multiset():
+    data = _data(800)
+    sets = []
+    for backend in ("np", "jax", "pallas"):
+        ds = rsp.partition(data, blocks=4, seed=5, backend=backend)
+        flat = ds.stacked().reshape(-1, data.shape[1])
+        sets.append(np.sort(flat.view(np.uint8).reshape(flat.shape[0], -1), axis=0))
+    np.testing.assert_array_equal(sets[0], sets[1])
+    np.testing.assert_array_equal(sets[0], sets[2])
+
+
+def test_np_backend_matches_free_function():
+    data = _data(1440)
+    ds = rsp.partition(data, blocks=6, seed=3, backend="np")
+    spec = RSPSpec(
+        num_records=1440, num_blocks=6, num_original_blocks=6,
+        record_shape=(5,), dtype="float32", seed=3,
+    )
+    np.testing.assert_array_equal(ds.stacked(), two_stage_partition_np(data, spec))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        p_log=st.integers(0, 3),
+        k_log=st.integers(0, 3),
+        delta=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+        backend=st.sampled_from(["np", "jax", "pallas"]),
+    )
+    def test_backend_partition_property(p_log, k_log, delta, seed, backend):
+        P, K = 2**p_log, 2**k_log
+        N = P * K * delta
+        rng = np.random.default_rng(seed)
+        data = rng.normal(size=(N, 3)).astype(np.float32)
+        ds = rsp.partition(
+            data, blocks=K, original_blocks=P, seed=seed, backend=backend
+        )
+        assert ds.stacked().shape == (K, N // K, 3)
+        assert is_partition(ds.stacked(), data)
+        ds2 = rsp.partition(
+            data, blocks=K, original_blocks=P, seed=seed, backend=backend
+        )
+        np.testing.assert_array_equal(ds.stacked(), ds2.stacked())
+
+else:
+
+    def test_backend_partition_property():
+        pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# backend="auto" selection rules (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_auto_selects_pallas_for_2d_float_on_tpu(monkeypatch):
+    from repro.rsp import backends
+
+    # on a TPU host the kernel compiles; off-TPU it would interpret, so the
+    # auto rule only prefers pallas when a TPU backend is attached
+    monkeypatch.setattr(backends.jax, "default_backend", lambda: "tpu")
+    data = _data(640)
+    spec = RSPSpec(num_records=640, num_blocks=4, num_original_blocks=4, seed=0)
+    chosen = rsp.select_backend(rsp.PartitionRequest(data=data, spec=spec))
+    assert chosen.name == "pallas"
+
+
+def test_auto_prefers_np_off_tpu():
+    import jax
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("TPU attached: auto legitimately picks pallas here")
+    ds = rsp.partition(_data(640), blocks=4, seed=0, backend="auto")
+    assert ds.backend == "np"  # interpret-mode pallas declines auto-selection
+
+
+def test_auto_selects_np_when_kernel_constraints_fail(monkeypatch):
+    from repro.rsp import backends
+
+    monkeypatch.setattr(backends.jax, "default_backend", lambda: "tpu")
+
+    def chosen(data, blocks, **kw):
+        spec = RSPSpec(
+            num_records=np.shape(data)[0], num_blocks=blocks,
+            num_original_blocks=blocks, seed=0,
+        )
+        return rsp.select_backend(rsp.PartitionRequest(data=data, spec=spec, **kw)).name
+
+    tokens = np.arange(64 * 9, dtype=np.int32).reshape(64, 9)  # int dtype
+    assert chosen(tokens, 4) == "np"
+    cube = np.zeros((64, 3, 3), dtype=np.float32)              # 3-D records
+    assert chosen(cube, 4) == "np"
+    # assignment permutation is intrinsic to the pallas tile dealing
+    assert chosen(_data(640), 4, permute_assignment=False) == "np"
+
+
+def test_auto_selects_shard_map_when_mesh_supplied():
+    import jax
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    data = _data(256)
+    ds = rsp.partition(data, blocks=1, seed=0, backend="auto", mesh=mesh)
+    assert ds.backend == "shard_map"
+    assert is_partition(ds.stacked(), data)
+    # mesh supplied but P=K != mesh size -> predicate fails, falls through
+    ds2 = rsp.partition(data, blocks=4, seed=0, backend="auto", mesh=mesh)
+    assert ds2.backend in ("pallas", "np")  # next eligible by platform
+
+
+@pytest.mark.slow
+def test_auto_shard_map_multidevice_subprocess():
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro import rsp
+from repro.core import is_partition
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+data = np.random.default_rng(0).normal(size=(1600, 5)).astype(np.float32)
+ds = rsp.partition(data, blocks=4, seed=2, backend="auto", mesh=mesh)
+assert ds.backend == "shard_map", ds.backend
+assert is_partition(ds.stacked(), data)
+print("AUTO_SHARD_MAP_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "AUTO_SHARD_MAP_OK" in proc.stdout
+
+
+def test_explicit_backend_refusal_and_unknown():
+    data = _data(640)
+    with pytest.raises(ValueError, match="cannot serve"):
+        rsp.partition(data, blocks=4, seed=0, backend="shard_map")  # no mesh
+    with pytest.raises(ValueError, match="unknown backend"):
+        rsp.partition(data, blocks=4, seed=0, backend="spark")
+
+
+def test_backend_eligibility_reasons():
+    data = _data(640)
+    spec = RSPSpec(num_records=640, num_blocks=4, num_original_blocks=4, seed=0)
+    elig = rsp.backend_eligibility(rsp.PartitionRequest(data=data, spec=spec))
+    assert elig["np"] is None and elig["jax"] is None and elig["pallas"] is None
+    assert "mesh" in elig["shard_map"]
+
+
+# ---------------------------------------------------------------------------
+# save / open round-trip (stored RSP with sketches in the manifest)
+# ---------------------------------------------------------------------------
+
+def test_save_open_roundtrip(tmp_path):
+    data = _data(1024)
+    ds = rsp.partition(data, blocks=8, seed=9, backend="np", num_classes=2)
+    out = ds.save(str(tmp_path / "corpus"))
+    assert out is ds  # chainable
+
+    got = rsp.open(str(tmp_path / "corpus"))
+    assert got.spec == ds.spec
+    assert got.backend == "np" and got.num_classes == 2
+    for k in range(8):
+        np.testing.assert_array_equal(got.block(k), ds.block(k))
+    # sketches came from the manifest, not a re-scan
+    for a, b in zip(got.summaries, ds.summaries):
+        np.testing.assert_allclose(a.mean, b.mean)
+        np.testing.assert_array_equal(a.label_hist, b.label_hist)
+    assert is_partition(got.stacked(), data)
+
+
+def test_out_of_range_labels_rejected():
+    data = _data(512)
+    data[7, -1] = 5.0  # not a valid class for num_classes=2
+    with pytest.raises(ValueError, match="label column"):
+        rsp.partition(data, blocks=4, seed=0, backend="np", num_classes=2)
+
+
+def test_store_backed_ensemble_reads_only_sampled_blocks(tmp_path, monkeypatch):
+    data = _data(1024)
+    rsp.partition(data, blocks=8, seed=2, backend="np", num_classes=2).save(
+        str(tmp_path / "s")
+    )
+    ds = rsp.open(str(tmp_path / "s"))
+    loaded: set[int] = set()
+    orig = RSPStore.load_block
+
+    def spying(self, block_id, **kw):
+        loaded.add(block_id)
+        return orig(self, block_id, **kw)
+
+    monkeypatch.setattr(RSPStore, "load_block", spying)
+    learner = rsp.make_logreg(data.shape[1] - 1, 2, steps=20)
+    ds.ensemble(
+        learner, eval_x=data[:64, :-1], eval_y=data[:64, -1].astype(np.int32),
+        g=3, batches=1, seed=0,
+    )
+    assert len(loaded) == 3  # one batch of g blocks, nothing else
+
+
+def test_summaries_combine_to_full_data_moments():
+    data = _data(2048)
+    ds = rsp.partition(data, blocks=8, seed=1, backend="np")
+    stats = ds.moments()  # all blocks, sketch-combined
+    wide = data.astype(np.float64)
+    np.testing.assert_allclose(stats.mean, wide.mean(0), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(stats.std, wide.std(0, ddof=1), rtol=1e-9, atol=1e-12)
+    assert stats.count == 2048
+
+
+def test_dataset_sample_estimate_and_loader(tmp_path):
+    data = _data(1024)
+    ds = rsp.partition(data, blocks=8, seed=2, backend="np", num_classes=2)
+    ids = ds.sample(3, seed=4)
+    assert len(ids) == 3 and len(set(ids)) == 3
+    est = ds.estimate(lambda b: b.mean(0), g=4, seed=0)
+    assert np.abs(est - data.mean(0)).max() < 0.2
+    assert 0.0 <= ds.label_divergence() <= 1.0
+    loader = ds.loader(batch_size=64, seed=1)
+    batches = [loader.next_batch() for _ in range(16)]  # 16*64 = one epoch
+    allb = np.concatenate(batches)
+    flat = ds.stacked().reshape(-1, data.shape[1])
+    a = np.sort(allb.view(np.uint8).reshape(allb.shape[0], -1), axis=0)
+    b = np.sort(flat.view(np.uint8).reshape(flat.shape[0], -1), axis=0)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# RSPStore: atomic writes leave no temp files; manifest cache invalidates
+# on mtime change
+# ---------------------------------------------------------------------------
+
+def test_store_write_leaves_no_temp_files(tmp_path):
+    data = _data(512)
+    rsp.partition(data, blocks=4, seed=0, backend="np").save(str(tmp_path / "s"))
+    leftovers = glob.glob(str(tmp_path / "s" / "*.tmp*"))
+    assert leftovers == []
+
+
+def test_store_manifest_cache_and_invalidation(tmp_path):
+    data = _data(512)
+    ds = rsp.partition(data, blocks=4, seed=0, backend="np", num_classes=2)
+    ds.save(str(tmp_path / "s"))
+    store = RSPStore(str(tmp_path / "s"))
+
+    assert store.num_blocks() == 4
+    first = store._manifest()
+    assert store._manifest() is first  # cached: same parsed object
+    store.load_block(1, verify=True)
+    assert store._manifest() is first  # verify path reuses the cache
+
+    # a re-write (new mtime) must invalidate the cache
+    time.sleep(0.01)
+    spec2 = RSPSpec(num_records=512, num_blocks=2, num_original_blocks=2, seed=1)
+    store.write_partition(two_stage_partition_np(data, spec2), spec2)
+    assert store.num_blocks() == 2
+    assert store._manifest() is not first
+    # stale blocks from the 4-block partition are gone, not served silently
+    assert not os.path.exists(store._block_path(2))
+    with pytest.raises(IndexError):
+        store.load_block(3)
+
+    # an external writer (fresh store handle) is picked up via mtime too
+    time.sleep(0.01)
+    other = RSPStore(str(tmp_path / "s"))
+    cached = other._manifest()
+    spec3 = RSPSpec(num_records=512, num_blocks=4, num_original_blocks=4, seed=2)
+    store.write_partition(two_stage_partition_np(data, spec3), spec3)
+    assert other.num_blocks() == 4
+    assert other._manifest() is not cached
