@@ -48,8 +48,10 @@ SUITES = {}
 def _register_suites():
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks.kernel_bench import ALL_KERNELS
+    from benchmarks.engine_bench import engine_rows
 
     SUITES.update({
+        "engine": [engine_rows],
         "fig1": [ALL_FIGS[0]],
         "fig2": [ALL_FIGS[1]],
         "fig34": [ALL_FIGS[2]],

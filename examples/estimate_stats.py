@@ -51,6 +51,23 @@ def main():
     true_q = np.quantile(data, 0.5, axis=0)
     print(f"median from 5 blocks: max abs err {np.abs(q - true_q).max():.4f}")
 
+    # sketch-guided selection: on a *skewed, contiguously-chunked* corpus
+    # (NOT an RSP -- the pathological storage order), uniform block sampling
+    # is at its worst; weighted PPS selection + Horvitz-Thompson reweighting
+    # recovers the corpus mean from the same number of blocks
+    rng = np.random.default_rng(0)
+    skewed = np.sort(rng.lognormal(mean=1.0, sigma=1.2, size=64 * 512))
+    chunked = rsp.RSPDataset(
+        rsp.RSPSpec(num_records=64 * 512, num_blocks=64, num_original_blocks=1,
+                    record_shape=(1,)),
+        blocks=skewed.reshape(64, 512, 1).astype(np.float32),
+    )
+    truth = skewed.mean()
+    uni = chunked.moments(g=8, seed=1).mean[0]
+    wgt = chunked.moments(g=8, seed=1, policy="weighted").mean[0]
+    print(f"skewed chunked corpus, g=8: true mean {truth:.3f}, "
+          f"uniform {uni:.3f}, weighted+HT {wgt:.3f}")
+
 
 if __name__ == "__main__":
     main()

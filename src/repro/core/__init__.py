@@ -23,6 +23,9 @@ API map (paper reference in parentheses):
                distributed_rsp_partition-- shard_map + all_to_all (Algorithm 1)
                randomize_dataset, is_partition, empirical_cdf (Defs. 2/3)
   sampling     BlockSampler, deal_blocks, HostAssignment (Definition 4)
+               SamplingPolicy: UniformPolicy / WeightedPolicy /
+               StratifiedPolicy, make_policy, sketch_dispersion
+               (sketch-guided block selection + HT reweighting)
   estimation   BlockLevelEstimator, MomentStats, block_moments,
                combine_moments, batched_block_moments, block_histogram,
                quantile_from_histogram (Sec. 8)
@@ -45,7 +48,18 @@ from repro.core.partition import (
     two_stage_partition_jax,
     two_stage_partition_np,
 )
-from repro.core.sampler import BlockSampler, HostAssignment, deal_blocks
+from repro.core.sampler import (
+    POLICIES,
+    BlockSampler,
+    HostAssignment,
+    SamplingPolicy,
+    StratifiedPolicy,
+    UniformPolicy,
+    WeightedPolicy,
+    deal_blocks,
+    make_policy,
+    sketch_dispersion,
+)
 from repro.core.estimators import (
     BlockLevelEstimator,
     MomentStats,
@@ -54,6 +68,7 @@ from repro.core.estimators import (
     block_moments,
     combine_moments,
     quantile_from_histogram,
+    streaming_estimate,
 )
 from repro.core.ensemble import (
     BaseLearner,

@@ -92,6 +92,23 @@ class BlockLevelEstimator:
         self.history_mean.append(self._acc.mean.copy())
         self.history_std.append(self._acc.std.copy())
 
+    def consume(
+        self,
+        blocks,
+        *,
+        rel_tol: float | None = None,
+        window: int = 3,
+    ) -> "BlockLevelEstimator":
+        """Fold a block stream (e.g. ``BlockExecutor.map_blocks(None, ids)``)
+        into the estimator.  With ``rel_tol`` set, stop early once
+        :meth:`converged` fires -- on a prefetching stream the next blocks are
+        already in flight, so the scan overlaps fetch and combine."""
+        for block in blocks:
+            self.update(block)
+            if rel_tol is not None and self.converged(rel_tol, window):
+                break
+        return self
+
     @property
     def stats(self) -> MomentStats:
         if self._acc is None:
@@ -108,6 +125,21 @@ class BlockLevelEstimator:
         prev = self.history_mean[-1 - window]
         denom = np.maximum(np.abs(cur), 1e-12)
         return bool(np.max(np.abs(cur - prev) / denom) < rel_tol)
+
+
+def streaming_estimate(
+    executor,
+    ids: Sequence[int],
+    *,
+    rel_tol: float | None = None,
+    window: int = 3,
+) -> BlockLevelEstimator:
+    """Run the block-level estimation loop over an executor's prefetched
+    stream: ``executor`` is anything with ``map_blocks(fn, ids)`` (see
+    ``repro.rsp.engine.BlockExecutor``); blocks load ahead of the combine."""
+    return BlockLevelEstimator().consume(
+        executor.map_blocks(None, ids), rel_tol=rel_tol, window=window
+    )
 
 
 @jax.jit

@@ -114,3 +114,256 @@ def deal_blocks(
     return HostAssignment(
         {h: perm[h::num_hosts].tolist() for h in range(num_hosts)}
     )
+
+
+# ---------------------------------------------------------------------------
+# Sampling policies: sketch-guided block selection
+# ---------------------------------------------------------------------------
+
+class SamplingPolicy:
+    """Strategy for choosing which blocks a block-level sample contains.
+
+    ``uniform`` is the paper's Definition 4 (every block equally likely,
+    without replacement).  The non-uniform policies use the partition-time
+    sketches to *bias* selection toward informative blocks -- in the style of
+    summary-statistics-driven partition selection (Rong et al., 2020) --
+    and expose the Horvitz-Thompson ``weights`` that make downstream
+    moment estimates unbiased again (``combine_summaries(..., weights=)``).
+
+    Interface: ``sample(g) -> ids`` (stateful, deterministic from seed +
+    draw counter), ``weights(ids)`` (HT weights for a draw, ``None`` when
+    the plain average is already unbiased), ``epoch`` (a monotone tag for
+    per-visit block permutations in the loader), and ``state_dict`` /
+    ``load_state_dict`` for O(1) resume.
+    """
+
+    name = "base"
+
+    def sample(self, g: int) -> list[int]:
+        raise NotImplementedError
+
+    def weights(self, ids: Sequence[int]) -> np.ndarray | None:
+        return None
+
+    @property
+    def epoch(self) -> int:
+        return 0
+
+    def state_dict(self) -> dict:
+        raise NotImplementedError
+
+    def load_state_dict(self, state: dict) -> None:
+        raise NotImplementedError
+
+
+class UniformPolicy(SamplingPolicy):
+    """Definition-4 sampling: equal probability, without replacement within
+    an epoch (delegates to :class:`BlockSampler`)."""
+
+    name = "uniform"
+
+    def __init__(self, num_blocks: int, *, seed: int = 0):
+        self.sampler = BlockSampler(num_blocks, seed=seed)
+
+    def sample(self, g: int) -> list[int]:
+        return self.sampler.sample(g)
+
+    @property
+    def epoch(self) -> int:
+        return self.sampler.state.epoch
+
+    def state_dict(self) -> dict:
+        return {"kind": self.name, "sampler": self.sampler.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.sampler = BlockSampler.from_state_dict(
+            self.sampler.num_blocks, state["sampler"]
+        )
+
+
+def sketch_dispersion(summaries: Sequence) -> np.ndarray:
+    """Per-block selection score from the partition-time sketches: the
+    feature-averaged spread plus mean magnitude, ``mean_j(std_j + |mean_j|)``.
+
+    For skewed corpora this tracks each block's contribution to the corpus
+    totals (blocks with large/spread-out values score high), which is what
+    probability-proportional-to-size selection wants.  Any positive score
+    stays *unbiased* under HT reweighting; the score only moves variance.
+    """
+    return np.array(
+        [float(np.mean(s.std + np.abs(s.mean))) for s in summaries], dtype=np.float64
+    )
+
+
+class WeightedPolicy(SamplingPolicy):
+    """PPS selection: g independent draws with replacement, block ``k`` with
+    probability proportional to its sketch dispersion.  ``weights`` returns
+    the Hansen-Hurwitz / HT factors ``1 / (g * p_k)`` so that
+    ``sum_k w_k * t_k`` is an unbiased estimate of the corpus total of any
+    per-block total ``t_k``."""
+
+    name = "weighted"
+
+    def __init__(
+        self,
+        num_blocks: int,
+        summaries: Sequence | None = None,
+        *,
+        probabilities: np.ndarray | None = None,
+        seed: int = 0,
+        floor: float = 0.05,
+    ):
+        if probabilities is None:
+            if summaries is None:
+                raise ValueError("weighted policy needs summaries or probabilities")
+            score = sketch_dispersion(summaries)
+            # floor keeps every block reachable (and HT weights bounded)
+            score = score + floor * max(score.mean(), 1e-12)
+            probabilities = score
+        p = np.asarray(probabilities, dtype=np.float64)
+        if p.shape != (num_blocks,) or np.any(p < 0) or p.sum() <= 0:
+            raise ValueError("probabilities must be non-negative, one per block")
+        self.probabilities = p / p.sum()
+        self.seed = seed
+        self._draws = 0
+
+    def sample(self, g: int) -> list[int]:
+        if g <= 0:
+            raise ValueError("g must be positive")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x5E1EC7, self._draws])
+        )
+        self._draws += 1
+        return rng.choice(
+            self.probabilities.shape[0], size=g, replace=True, p=self.probabilities
+        ).tolist()
+
+    def weights(self, ids: Sequence[int]) -> np.ndarray:
+        p = self.probabilities[np.asarray(ids, dtype=np.int64)]
+        return 1.0 / (len(ids) * p)
+
+    @property
+    def epoch(self) -> int:
+        return self._draws
+
+    def state_dict(self) -> dict:
+        return {"kind": self.name, "seed": self.seed, "draws": self._draws}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self._draws = int(state["draws"])
+
+
+class StratifiedPolicy(SamplingPolicy):
+    """Label-histogram stratification: blocks are grouped by their dominant
+    label (argmax of the sketch's label histogram), draws are allocated to
+    strata proportionally to stratum size (largest remainder), and blocks are
+    drawn uniformly without replacement within each stratum.  ``weights``
+    returns ``B_h / g_h`` (stratum size over draws taken from it), the HT
+    expansion for stratified totals -- exactly unbiased once every stratum
+    receives a draw; with ``g`` below the stratum count, strata are included
+    randomly in proportion, so single-draw estimates cover a random subset
+    of strata and are only approximately unbiased (use ``weighted`` when
+    small-``g`` exactness matters)."""
+
+    name = "stratified"
+
+    def __init__(self, num_blocks: int, summaries: Sequence, *, seed: int = 0):
+        if len(summaries) != num_blocks:
+            raise ValueError("need one summary per block")
+        if any(getattr(s, "label_hist", None) is None for s in summaries):
+            raise ValueError("stratified policy needs label histograms in the sketches")
+        strata: dict[int, list[int]] = {}
+        for k, s in enumerate(summaries):
+            strata.setdefault(int(np.argmax(s.label_hist)), []).append(k)
+        self.strata = {h: np.asarray(ids) for h, ids in sorted(strata.items())}
+        self._stratum_of = np.empty(num_blocks, dtype=np.int64)
+        for h, ids in self.strata.items():
+            self._stratum_of[ids] = h
+        self.seed = seed
+        self._draws = 0
+
+    def _allocate(self, g: int, rng: np.random.Generator) -> dict[int, int]:
+        """Proportional allocation of g draws to strata, capped at stratum
+        size: integer parts are deterministic, the fractional remainder draws
+        are assigned *randomly* with probability proportional to the
+        remainders -- so even ``g=1`` streams (the loader's refill pattern)
+        visit every stratum in corpus proportion instead of starving the
+        small ones."""
+        sizes = {h: len(ids) for h, ids in self.strata.items()}
+        total = sum(sizes.values())
+        g = min(g, total)
+        exact = {h: g * b / total for h, b in sizes.items()}
+        alloc = {h: min(int(e), sizes[h]) for h, e in exact.items()}
+        short = g - sum(alloc.values())
+        while short > 0:
+            open_strata = [h for h in self.strata if alloc[h] < sizes[h]]
+            rem = np.array(
+                [max(exact[h] - int(exact[h]), 1e-9) for h in open_strata]
+            )
+            h = open_strata[int(rng.choice(len(open_strata), p=rem / rem.sum()))]
+            alloc[h] += 1
+            short -= 1
+        return alloc
+
+    def sample(self, g: int) -> list[int]:
+        if g <= 0:
+            raise ValueError("g must be positive")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x57A7A, self._draws])
+        )
+        self._draws += 1
+        out: list[int] = []
+        for h, take in self._allocate(g, rng).items():
+            if take > 0:
+                ids = self.strata[h]
+                out.extend(rng.choice(ids, size=take, replace=False).tolist())
+        return out
+
+    def weights(self, ids: Sequence[int]) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        strata = self._stratum_of[ids]
+        drawn = {h: int((strata == h).sum()) for h in np.unique(strata)}
+        return np.array(
+            [len(self.strata[h]) / drawn[h] for h in strata], dtype=np.float64
+        )
+
+    @property
+    def epoch(self) -> int:
+        return self._draws
+
+    def state_dict(self) -> dict:
+        return {"kind": self.name, "seed": self.seed, "draws": self._draws}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self._draws = int(state["draws"])
+
+
+POLICIES = ("uniform", "weighted", "stratified")
+
+
+def make_policy(
+    policy: str | SamplingPolicy,
+    num_blocks: int,
+    *,
+    seed: int = 0,
+    summaries: Sequence | None = None,
+    **kwargs,
+) -> SamplingPolicy:
+    """Resolve a policy name (or pass through an instance).
+
+    ``"uniform"`` needs nothing beyond the block count; ``"weighted"`` and
+    ``"stratified"`` need the per-block sketches (``RSPDataset.summaries``).
+    """
+    if isinstance(policy, SamplingPolicy):
+        return policy
+    if policy == "uniform":
+        return UniformPolicy(num_blocks, seed=seed, **kwargs)
+    if policy == "weighted":
+        return WeightedPolicy(num_blocks, summaries, seed=seed, **kwargs)
+    if policy == "stratified":
+        if summaries is None:
+            raise ValueError("stratified policy needs summaries")
+        return StratifiedPolicy(num_blocks, summaries, seed=seed, **kwargs)
+    raise ValueError(f"unknown sampling policy {policy!r} (uniform | weighted | stratified)")

@@ -30,9 +30,27 @@ from repro.core.ensemble import (
     make_logreg,
     make_mlp,
 )
-from repro.core.estimators import BlockLevelEstimator, MomentStats
-from repro.core.sampler import BlockSampler, HostAssignment
+from repro.core.estimators import BlockLevelEstimator, MomentStats, streaming_estimate
+from repro.core.sampler import (
+    POLICIES,
+    BlockSampler,
+    HostAssignment,
+    SamplingPolicy,
+    StratifiedPolicy,
+    UniformPolicy,
+    WeightedPolicy,
+    make_policy,
+    sketch_dispersion,
+)
 from repro.core.types import RSPSpec
+from repro.rsp.engine import (
+    BlockExecutor,
+    BlockFetcher,
+    MemoryFetcher,
+    MmapFetcher,
+    StoreFetcher,
+    as_fetcher,
+)
 from repro.rsp.backends import (
     AUTO,
     PartitionBackend,
@@ -58,30 +76,44 @@ open = RSPDataset.open  # noqa: A001 -- facade verb, mirrors gzip.open
 
 __all__ = [
     "AUTO",
+    "POLICIES",
     "BaseLearner",
+    "BlockExecutor",
+    "BlockFetcher",
     "BlockLevelEstimator",
     "BlockSampler",
     "BlockSummary",
     "Ensemble",
     "EnsembleHistory",
     "HostAssignment",
+    "MemoryFetcher",
+    "MmapFetcher",
     "MomentStats",
     "PartitionBackend",
     "PartitionRequest",
     "RSPDataset",
     "RSPSpec",
+    "SamplingPolicy",
+    "StoreFetcher",
+    "StratifiedPolicy",
+    "UniformPolicy",
+    "WeightedPolicy",
+    "as_fetcher",
     "available_backends",
     "backend_eligibility",
     "combine_summaries",
     "get_backend",
     "make_logreg",
     "make_mlp",
+    "make_policy",
     "max_divergence_from_summaries",
     "open",
     "partition",
     "register_backend",
     "run_partition",
     "select_backend",
+    "sketch_dispersion",
+    "streaming_estimate",
     "summarize_block",
     "summarize_blocks",
 ]

@@ -14,6 +14,16 @@ Construction dispatches through the backend registry (numpy streaming, jit
 jax, shard_map collective, Pallas kernel); the resulting dataset carries its
 ``RSPSpec``, lazy block access (in-memory or store-backed), and per-block
 summary statistics computed once at partition time.
+
+All block movement goes through one ``repro.rsp.engine.BlockExecutor``
+(``ds.executor``): a pluggable fetcher (``fetcher="auto" | "memory" |
+"store" | "mmap"``) behind a bounded thread-pool prefetch pipeline with an
+LRU block cache, so estimation, ensemble learning, similarity probes, and
+the training loader share the same fast read path.  Block *selection* is a
+pluggable ``SamplingPolicy`` (``policy="uniform" | "weighted" |
+"stratified"``): the non-uniform policies use the partition-time sketches to
+bias selection and expose Horvitz-Thompson weights that keep the moment
+estimates unbiased.
 """
 
 from __future__ import annotations
@@ -29,12 +39,26 @@ from repro.core.ensemble import (
     EnsembleHistory,
     asymptotic_ensemble_learn,
 )
-from repro.core.estimators import BlockLevelEstimator, MomentStats
+from repro.core.estimators import BlockLevelEstimator, MomentStats, streaming_estimate
 from repro.core.registry import RSPStore
-from repro.core.sampler import BlockSampler, HostAssignment, deal_blocks
+from repro.core.sampler import (
+    BlockSampler,
+    HostAssignment,
+    SamplingPolicy,
+    deal_blocks,
+    make_policy,
+)
 from repro.core.similarity import ks_statistic, max_label_divergence, mmd_block_vs_data
 from repro.core.types import RSPSpec
 from repro.rsp.backends import AUTO, PartitionRequest, run_partition
+from repro.rsp.engine import (
+    BlockExecutor,
+    BlockFetcher,
+    MemoryFetcher,
+    MmapFetcher,
+    StoreFetcher,
+    as_fetcher,
+)
 from repro.rsp.summaries import (
     BlockSummary,
     combine_summaries,
@@ -56,6 +80,9 @@ class RSPDataset:
         summaries: list[BlockSummary] | None = None,
         num_classes: int | None = None,
         label_column: int = -1,
+        fetcher: str | BlockFetcher = "auto",
+        prefetch: int = 4,
+        cache_blocks: int = 8,
     ):
         if blocks is None and store is None:
             raise ValueError("provide in-memory blocks and/or a store")
@@ -66,6 +93,10 @@ class RSPDataset:
         self._blocks = None if blocks is None else np.asarray(blocks)
         self._store = store
         self._summaries = summaries
+        self._fetcher_mode = fetcher
+        self._prefetch = prefetch
+        self._cache_blocks = cache_blocks
+        self._executor: BlockExecutor | None = None
 
     # ------------------------------------------------------------------
     # Construction: Algorithm 1 through the backend registry
@@ -125,7 +156,7 @@ class RSPDataset:
         return ds
 
     # ------------------------------------------------------------------
-    # Block access (lazy when store-backed)
+    # Block access: one executor owns all block movement
     # ------------------------------------------------------------------
     @property
     def num_blocks(self) -> int:
@@ -138,26 +169,65 @@ class RSPDataset:
     def __len__(self) -> int:
         return self.num_blocks
 
+    @property
+    def executor(self) -> BlockExecutor:
+        """The dataset's :class:`BlockExecutor` (built lazily): prefetch
+        pipeline + LRU cache over the configured fetcher."""
+        if self._executor is None:
+            self._executor = BlockExecutor(
+                self._make_fetcher(),
+                prefetch=self._prefetch,
+                cache_blocks=self._cache_blocks,
+            )
+        return self._executor
+
+    def _make_fetcher(self) -> BlockFetcher:
+        mode = self._fetcher_mode
+        if not isinstance(mode, str):
+            return as_fetcher(mode)
+        if mode == "auto":
+            if self._blocks is not None:
+                return MemoryFetcher(self._blocks)
+            return StoreFetcher(self._store)
+        if mode == "memory":
+            if self._blocks is None:
+                # materialize directly from the store -- self.stacked() would
+                # recurse through self.executor, which is being built here
+                with BlockExecutor(
+                    StoreFetcher(self._store), prefetch=self._prefetch, cache_blocks=0
+                ) as loadall:
+                    self._blocks = loadall.take(range(self.num_blocks))
+            return MemoryFetcher(self._blocks)
+        if mode in ("store", "mmap"):
+            if self._store is None:
+                raise ValueError(f"fetcher={mode!r} needs a store-backed dataset")
+            return StoreFetcher(self._store) if mode == "store" else MmapFetcher(self._store)
+        raise ValueError(
+            f"unknown fetcher {mode!r} (auto | memory | store | mmap | BlockFetcher)"
+        )
+
+    def close(self) -> None:
+        """Release the executor's worker threads (optional; idle otherwise)."""
+        if self._executor is not None:
+            self._executor.close()
+            self._executor = None
+
     def block(self, block_id: int) -> np.ndarray:
         if not 0 <= block_id < self.num_blocks:
             raise IndexError(f"block {block_id} out of range [0, {self.num_blocks})")
-        if self._blocks is not None:
-            return self._blocks[block_id]
-        return np.asarray(self._store.load_block(block_id))
+        return self.executor.fetch(block_id)
 
     def __getitem__(self, block_id: int) -> np.ndarray:
         return self.block(block_id)
 
     def take(self, block_ids: Sequence[int]) -> np.ndarray:
-        """Stack the given blocks -> [g, n, ...]."""
-        return np.stack([self.block(b) for b in block_ids])
+        """Stack the given blocks -> [g, n, ...] (prefetched)."""
+        return self.executor.take(block_ids)
 
     def stacked(self) -> np.ndarray:
         """All blocks as one [K, n, ...] array (loads everything)."""
         if self._blocks is None:
-            self._blocks = np.stack(
-                [np.asarray(self._store.load_block(k)) for k in range(self.num_blocks)]
-            )
+            self._blocks = self.executor.take(range(self.num_blocks))
         return self._blocks
 
     # ------------------------------------------------------------------
@@ -172,7 +242,7 @@ class RSPDataset:
     def _compute_summaries(self) -> list[BlockSummary]:
         label_column = self.label_column if self.num_classes is not None else None
         return summarize_blocks(
-            (self.block(k) for k in range(self.num_blocks)),
+            self.executor.map_blocks(None, range(self.num_blocks)),
             label_column=label_column,
             num_classes=self.num_classes,
         )
@@ -197,8 +267,20 @@ class RSPDataset:
         return self
 
     @classmethod
-    def open(cls, path: str) -> "RSPDataset":
-        """Open a stored RSP; blocks load lazily, sketches from the manifest."""
+    def open(
+        cls,
+        path: str,
+        *,
+        fetcher: str | BlockFetcher = "auto",
+        prefetch: int = 4,
+        cache_blocks: int = 8,
+    ) -> "RSPDataset":
+        """Open a stored RSP; blocks load lazily, sketches from the manifest.
+
+        ``fetcher="mmap"`` memory-maps blocks instead of materializing them
+        (for corpora larger than RAM); ``prefetch``/``cache_blocks`` size the
+        executor's pipeline.
+        """
         store = RSPStore(path)
         meta = store.meta()
         raw = store.summaries()
@@ -209,6 +291,9 @@ class RSPDataset:
             summaries=None if raw is None else [BlockSummary.from_dict(d) for d in raw],
             num_classes=meta.get("num_classes"),
             label_column=int(meta.get("label_column", -1)),
+            fetcher=fetcher,
+            prefetch=prefetch,
+            cache_blocks=cache_blocks,
         )
 
     @property
@@ -216,14 +301,32 @@ class RSPDataset:
         return self._store
 
     # ------------------------------------------------------------------
-    # Block-level sampling (Definition 4)
+    # Block-level sampling (Definition 4 + sketch-guided policies)
     # ------------------------------------------------------------------
     def sampler(self, seed: int = 0) -> BlockSampler:
         return BlockSampler(self.num_blocks, seed=seed)
 
-    def sample(self, g: int, *, seed: int = 0) -> list[int]:
-        """One block-level sample: g block ids without replacement."""
-        return self.sampler(seed).sample(g)
+    def policy(
+        self, policy: str | SamplingPolicy = "uniform", *, seed: int = 0, **kwargs
+    ) -> SamplingPolicy:
+        """Resolve a block-selection policy over this dataset.  ``weighted``
+        and ``stratified`` read the partition-time sketches."""
+        needs_sketches = isinstance(policy, str) and policy != "uniform"
+        return make_policy(
+            policy,
+            self.num_blocks,
+            seed=seed,
+            summaries=self.summaries if needs_sketches else None,
+            **kwargs,
+        )
+
+    def sample(
+        self, g: int, *, seed: int = 0, policy: str | SamplingPolicy = "uniform"
+    ) -> list[int]:
+        """One block-level sample: g block ids (without replacement for
+        ``uniform``; PPS-with-replacement for ``weighted``; proportional
+        strata draws for ``stratified``)."""
+        return self.policy(policy, seed=seed).sample(g)
 
     def deal(self, num_hosts: int, *, seed: int = 0, epoch: int = 0) -> HostAssignment:
         """Deal block ids across hosts for one epoch (multi-host training)."""
@@ -233,36 +336,80 @@ class RSPDataset:
     # Estimation (Sec. 8)
     # ------------------------------------------------------------------
     def moments(
-        self, g: int | None = None, *, seed: int = 0, ids: Sequence[int] | None = None
+        self,
+        g: int | None = None,
+        *,
+        seed: int = 0,
+        ids: Sequence[int] | None = None,
+        policy: str | SamplingPolicy = "uniform",
     ) -> MomentStats:
         """Corpus moments estimated from a block-level sample of ``g`` blocks
         (``ids`` if given, all blocks when both are None) -- combined from the
-        partition-time sketches, so no block data is read."""
+        partition-time sketches, so no block data is read.  A non-uniform
+        ``policy`` selects blocks by their sketches and Horvitz-Thompson
+        reweights the combine, so the estimate stays unbiased."""
+        summaries = self.summaries
+        non_uniform = isinstance(policy, SamplingPolicy) or policy != "uniform"
+        if ids is not None and non_uniform:
+            raise ValueError(
+                "pass either ids or a non-uniform policy, not both: explicit ids"
+                " have no selection probabilities to HT-reweight by"
+            )
+        if non_uniform:
+            if g is None:
+                raise ValueError("non-uniform policies need g")
+            pol = self.policy(policy, seed=seed)
+            ids = pol.sample(g)
+            return combine_summaries(
+                [summaries[k] for k in ids],
+                weights=pol.weights(ids),
+                total_count=self.spec.num_records,
+            )
         if ids is None:
             ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
-        summaries = self.summaries
         return combine_summaries([summaries[k] for k in ids])
 
     def estimator(
-        self, g: int | None = None, *, seed: int = 0, ids: Sequence[int] | None = None
+        self,
+        g: int | None = None,
+        *,
+        seed: int = 0,
+        ids: Sequence[int] | None = None,
+        rel_tol: float | None = None,
     ) -> BlockLevelEstimator:
-        """A ``BlockLevelEstimator`` fed with a block-level sample -- use when
-        the convergence history / plateau detector is wanted."""
+        """A ``BlockLevelEstimator`` fed through the executor's prefetched
+        block stream -- use when the convergence history / plateau detector
+        is wanted.  ``rel_tol`` stops the scan at the plateau."""
         if ids is None:
             ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
-        est = BlockLevelEstimator()
-        for k in ids:
-            est.update(self.block(k))
-        return est
+        return streaming_estimate(self.executor, ids, rel_tol=rel_tol)
 
     def estimate(
-        self, fn: Callable[[np.ndarray], Any], g: int | None = None, *, seed: int = 0
+        self,
+        fn: Callable[[np.ndarray], Any],
+        g: int | None = None,
+        *,
+        seed: int = 0,
+        policy: str | SamplingPolicy = "uniform",
     ) -> Any:
         """Block-level estimate of an arbitrary statistic: mean of ``fn(block)``
         over a block-level sample (each block is a random sample, so the
-        average is an unbiased estimate of the corpus statistic)."""
-        ids = range(self.num_blocks) if g is None else self.sample(g, seed=seed)
-        return np.mean([np.asarray(fn(self.block(k))) for k in ids], axis=0)
+        average is an unbiased estimate of the corpus statistic).  ``fn`` runs
+        on the executor's workers, overlapping with the fetch of later blocks.
+        Non-uniform policies contribute self-normalized HT weights."""
+        pol = None
+        if isinstance(policy, SamplingPolicy) or policy != "uniform":
+            if g is None:
+                raise ValueError("non-uniform policies need g")
+            pol = self.policy(policy, seed=seed)
+            ids = pol.sample(g)
+        else:
+            ids = (
+                list(range(self.num_blocks)) if g is None else self.sample(g, seed=seed)
+            )
+        values = [np.asarray(v) for v in self.executor.map_blocks(fn, ids)]
+        weights = pol.weights(ids) if pol is not None else None
+        return np.average(values, axis=0, weights=weights)
 
     # ------------------------------------------------------------------
     # Ensemble learning (Sec. 9, Algorithm 2)
@@ -281,15 +428,16 @@ class RSPDataset:
     ) -> tuple[Ensemble, EnsembleHistory]:
         """Asymptotic ensemble learning over block-level samples.  Records
         are split into features/label via ``label_column`` (set
-        ``num_classes`` at partition time).  Blocks are fetched lazily per
-        batch, so a store-backed dataset only reads the sampled blocks."""
+        ``num_classes`` at partition time).  Blocks stream through the
+        executor per batch, so a store-backed dataset only reads the sampled
+        blocks -- prefetched while the previous batch trains."""
         import jax.numpy as jnp
 
         if self.num_classes is None:
             raise ValueError("ensemble needs num_classes (set it at partition time)")
 
         def fetch(ids):
-            xs, ys = self._split_xy(self.take(ids))
+            xs, ys = self._split_xy(self.executor.take(ids))
             return jnp.asarray(xs), jnp.asarray(ys)
 
         return asymptotic_ensemble_learn(
@@ -330,13 +478,18 @@ class RSPDataset:
         ``metric="labels"``: L-inf label-distribution distance (needs
         ``num_classes``).
 
-        The corpus reference is the in-memory partition when available;
-        for store-backed datasets it is a bounded block-level sample
-        (valid by Lemma 1 -- each block is a random sample), so the full
-        corpus is never materialized.
+        The corpus reference is the full in-memory partition when available
+        (the probed block is legitimately a 1/K fraction of it); for
+        store-backed datasets it is a bounded block-level sample (valid by
+        Lemma 1 -- each block is a random sample) that *excludes* the probed
+        block, since a small reference that contained the probe would
+        overweight it far beyond its 1/K corpus share and shrink every
+        distance.
         """
         block = self.block(block_id)
-        corpus = self._corpus_reference(max(max_points, 4096), seed=seed)
+        corpus = self._corpus_reference(
+            max(max_points, 4096), seed=seed, exclude=block_id
+        )
         if metric == "mmd":
             return mmd_block_vs_data(block, corpus, max_points=max_points, seed=seed)
         if metric == "ks":
@@ -348,15 +501,25 @@ class RSPDataset:
             return max_label_divergence(block[:, col], corpus[:, col], self.num_classes)
         raise ValueError(f"unknown metric {metric!r} (mmd | ks | labels)")
 
-    def _corpus_reference(self, max_records: int, *, seed: int = 0) -> np.ndarray:
+    def _corpus_reference(
+        self, max_records: int, *, seed: int = 0, exclude: int | None = None
+    ) -> np.ndarray:
         """Flat [M, ...] corpus sample for similarity comparisons: the whole
         partition when in memory, else >= ``max_records`` records from a
-        block-level sample (no full-corpus load)."""
+        block-level sample (no full-corpus load).  ``exclude`` keeps a probed
+        block out of its own reference set (self-inclusion shrinks any
+        block-vs-corpus distance)."""
         if self._blocks is not None:
             return self._blocks.reshape(-1, *self.spec.record_shape)
         g = min(self.num_blocks, max(1, -(-max_records // self.block_size)))
-        ids = self.sample(g, seed=seed)
-        return self.take(ids).reshape(-1, *self.spec.record_shape)
+        request = min(self.num_blocks, g + (1 if exclude is not None else 0))
+        ids = self.sample(request, seed=seed)
+        if exclude is not None:
+            ids = [i for i in ids if i != exclude][:g]
+            if not ids:
+                # single-block store: the probe IS the corpus (degenerate)
+                ids = [exclude]
+        return self.executor.take(ids).reshape(-1, *self.spec.record_shape)
 
     def label_divergence(self) -> float:
         """Worst block-vs-corpus label L-inf distance, from the sketches alone."""
@@ -365,12 +528,31 @@ class RSPDataset:
     # ------------------------------------------------------------------
     # Training pipeline
     # ------------------------------------------------------------------
-    def loader(self, batch_size: int, *, seed: int = 0, **kwargs):
-        """An ``RSPLoader`` over this dataset (block-level sampled batches)."""
+    def loader(
+        self,
+        batch_size: int,
+        *,
+        seed: int = 0,
+        policy: str | SamplingPolicy = "uniform",
+        prefetch: int = 2,
+        **kwargs,
+    ):
+        """An ``RSPLoader`` over this dataset (block-level sampled batches,
+        prefetched through the engine; ``policy`` selects blocks)."""
         from repro.data.loader import BlockSource, RSPLoader
 
+        # the loader gets the dataset's configured fetcher (memory / store /
+        # mmap / custom) but its own cache-free executor: blocks stream in
+        # one hop, not through this dataset's executor and LRU cache (which
+        # would retain single-use training blocks)
         return RSPLoader(
-            BlockSource(dataset=self), batch_size=batch_size, seed=seed, **kwargs
+            BlockSource(dataset=self),
+            batch_size=batch_size,
+            seed=seed,
+            policy=policy,
+            prefetch=prefetch,
+            fetcher=self._make_fetcher(),
+            **kwargs,
         )
 
     def __repr__(self) -> str:

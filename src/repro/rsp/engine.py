@@ -1,0 +1,351 @@
+"""``repro.rsp.engine`` -- the streaming block-execution engine.
+
+Every block-consuming operation in the repo (statistics estimation, ensemble
+learning, similarity probes, the training loader) reduces to the same shape
+of work: *move a sequence of RSP blocks from a source to a consumer function
+as fast as the storage allows*.  This module owns that movement so the
+consumers don't have to:
+
+``BlockFetcher``
+    The pluggable source protocol -- ``num_blocks`` plus ``fetch(block_id)``.
+    Three implementations ship: :class:`MemoryFetcher` (stacked in-RAM
+    array, fetch is a view), :class:`StoreFetcher` (materializing
+    ``RSPStore`` reads), and :class:`MmapFetcher` (``np.load(mmap_mode="r")``
+    -- pages stream from disk on touch, so corpora larger than RAM work).
+    :func:`as_fetcher` adapts arrays, stores, datasets, and loader sources.
+
+``BlockExecutor``
+    Wraps a fetcher with a bounded thread-pool prefetch pipeline
+    (``prefetch`` blocks in flight on ``workers`` threads) and a small LRU
+    block cache.  Worker exceptions propagate to the consumer at the point
+    of consumption -- nothing dies silently.  Two primitives cover every
+    consumer:
+
+    * ``map_blocks(fn, ids)`` -- yield ``fn(block)`` for each id *in
+      order*, while the next ``prefetch`` blocks load in the background.
+      With ``fn=None`` it yields the raw blocks.
+    * ``stream_batches(ids, batch_size, ...)`` -- assemble fixed-size
+      record batches from the concatenated records of the id stream,
+      again with prefetch underneath.
+
+With ``prefetch=0`` the executor degrades to a plain synchronous loop (no
+threads), which is the reference behavior the pipeline is tested against.
+``benchmarks/engine_bench.py`` measures the three fetch paths.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.registry import RSPStore
+
+
+# ---------------------------------------------------------------------------
+# Fetchers
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class BlockFetcher(Protocol):
+    """Anything that can serve RSP blocks by id."""
+
+    @property
+    def num_blocks(self) -> int: ...
+
+    def fetch(self, block_id: int) -> np.ndarray: ...
+
+
+class MemoryFetcher:
+    """Blocks already stacked in memory -- ``fetch`` returns a view."""
+
+    def __init__(self, blocks: np.ndarray):
+        self._blocks = np.asarray(blocks)
+
+    @property
+    def num_blocks(self) -> int:
+        return self._blocks.shape[0]
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        return self._blocks[block_id]
+
+
+class StoreFetcher:
+    """Materializing ``RSPStore`` reads: each fetch copies the block into RAM
+    (the right default when blocks are consumed more than once)."""
+
+    def __init__(self, store: RSPStore, *, verify: bool = False):
+        self.store = store
+        self.verify = verify
+
+    @property
+    def num_blocks(self) -> int:
+        return self.store.num_blocks()
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        return np.asarray(self.store.load_block(block_id, mmap=False, verify=self.verify))
+
+
+class MmapFetcher:
+    """Memory-mapped ``RSPStore`` reads for corpora larger than RAM: blocks
+    come back as ``np.memmap`` views and pages stream from disk on touch."""
+
+    def __init__(self, store: RSPStore):
+        self.store = store
+
+    @property
+    def num_blocks(self) -> int:
+        return self.store.num_blocks()
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        return self.store.load_block(block_id, mmap=True)
+
+
+class _AdapterFetcher:
+    """Wraps any object exposing ``num_blocks`` and a block-loading method."""
+
+    def __init__(self, obj: Any, load: Callable[[int], np.ndarray]):
+        self._obj = obj
+        self._load = load
+
+    @property
+    def num_blocks(self) -> int:
+        n = self._obj.num_blocks
+        return n() if callable(n) else n
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        return self._load(block_id)
+
+
+def as_fetcher(source: Any, *, mode: str = "auto") -> BlockFetcher:
+    """Adapt ``source`` into a :class:`BlockFetcher`.
+
+    Accepts an existing fetcher, a stacked ``np.ndarray``, an ``RSPStore``
+    (``mode="store"`` materializes, ``"mmap"`` memory-maps, ``"auto"`` ==
+    ``"store"``), or any object with ``num_blocks`` and ``block``/``load``.
+    """
+    if isinstance(source, (MemoryFetcher, StoreFetcher, MmapFetcher, _AdapterFetcher)):
+        return source
+    if isinstance(source, np.ndarray):
+        return MemoryFetcher(source)
+    if isinstance(source, RSPStore):
+        if mode == "mmap":
+            return MmapFetcher(source)
+        if mode in ("auto", "store"):
+            return StoreFetcher(source)
+        raise ValueError(f"unknown fetcher mode {mode!r} for a store (auto | store | mmap)")
+    for name in ("block", "load", "fetch"):
+        load = getattr(source, name, None)
+        if callable(load) and hasattr(source, "num_blocks"):
+            return _AdapterFetcher(source, load)
+    raise TypeError(f"cannot build a BlockFetcher from {type(source).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class BlockExecutor:
+    """Prefetching block pipeline over a :class:`BlockFetcher`.
+
+    ``prefetch`` blocks are kept in flight on a bounded thread pool while the
+    consumer works; ``cache_blocks`` most-recently-used blocks are retained so
+    repeated probes (similarity references, overlapping samples) skip the
+    fetch entirely.  ``prefetch=0`` disables threading: every primitive then
+    runs as a plain synchronous loop with identical results.
+
+    Exceptions raised by the fetcher (or by a mapped ``fn``) inside a worker
+    thread are re-raised in the consumer when the failing block's result is
+    consumed.
+    """
+
+    def __init__(
+        self,
+        fetcher: BlockFetcher | Any,
+        *,
+        prefetch: int = 4,
+        cache_blocks: int = 8,
+        workers: int | None = None,
+    ):
+        self.fetcher = as_fetcher(fetcher)
+        self.prefetch = max(0, int(prefetch))
+        self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
+        self._cache_cap = max(0, int(cache_blocks))
+        self._cache_lock = threading.Lock()
+        if self.prefetch > 0:
+            n = workers if workers is not None else min(self.prefetch, 8)
+            self._pool: ThreadPoolExecutor | None = ThreadPoolExecutor(
+                max_workers=max(1, n), thread_name_prefix="rsp-engine"
+            )
+        else:
+            self._pool = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    def __enter__(self) -> "BlockExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- single-block access ----------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.fetcher.num_blocks
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        """Cache-aware synchronous fetch of one block.  Returned arrays are
+        marked read-only: blocks are shared (between the cache and every
+        consumer), so an in-place write would silently corrupt later reads --
+        copy first to mutate."""
+        with self._cache_lock:
+            if block_id in self._cache:
+                self._cache.move_to_end(block_id)
+                return self._cache[block_id]
+        block = self.fetcher.fetch(block_id)
+        if isinstance(block, np.ndarray):
+            block.setflags(write=False)
+        if self._cache_cap > 0:
+            with self._cache_lock:
+                self._cache[block_id] = block
+                self._cache.move_to_end(block_id)
+                while len(self._cache) > self._cache_cap:
+                    self._cache.popitem(last=False)
+        return block
+
+    def fetch_async(
+        self, block_id: int, fn: Callable[[np.ndarray], Any] | None = None
+    ) -> Future:
+        """Start fetching ``block_id`` (and applying ``fn``) on a worker.
+
+        Returns a future; without a pool (``prefetch=0``) the work runs
+        immediately on the caller's thread and the future is already done.
+        Either way, errors surface on ``.result()``.
+        """
+        if self._pool is None:
+            fut: Future = Future()
+            try:
+                fut.set_result(self._task(block_id, fn))
+            except BaseException as e:  # noqa: BLE001 -- mirror executor semantics
+                fut.set_exception(e)
+            return fut
+        return self._pool.submit(self._task, block_id, fn)
+
+    def _task(self, block_id: int, fn: Callable[[np.ndarray], Any] | None) -> Any:
+        block = self.fetch(block_id)
+        return fn(block) if fn is not None else block
+
+    # -- primitive 1: ordered map with prefetch ----------------------------
+    def map_blocks(
+        self,
+        fn: Callable[[np.ndarray], Any] | None,
+        ids: Iterable[int],
+        *,
+        with_ids: bool = False,
+    ) -> Iterator[Any]:
+        """Yield ``fn(block)`` for every id *in order*, prefetching ahead.
+
+        ``fn`` runs on the worker threads (overlapping fetch and transform);
+        ``fn=None`` yields the raw blocks.  ``with_ids=True`` yields
+        ``(block_id, result)`` pairs instead.
+        """
+        it = iter(ids)
+        window: collections.deque[tuple[int, Future]] = collections.deque()
+
+        def submit_one() -> None:
+            for b in it:
+                window.append((b, self.fetch_async(b, fn)))
+                return
+
+        try:
+            for _ in range(self.prefetch + 1):
+                submit_one()
+            while window:
+                bid, fut = window.popleft()
+                result = fut.result()
+                submit_one()
+                yield (bid, result) if with_ids else result
+        finally:
+            for _, fut in window:
+                fut.cancel()
+
+    def run(self, fn: Callable[[np.ndarray], Any] | None, ids: Sequence[int]) -> list:
+        """Materialized :meth:`map_blocks`."""
+        return list(self.map_blocks(fn, ids))
+
+    def take(self, ids: Sequence[int]) -> np.ndarray:
+        """Stack the given blocks -> [g, n, ...] (prefetched)."""
+        return np.stack([np.asarray(b) for b in self.map_blocks(None, ids)])
+
+    # -- primitive 2: record batches from a block-id stream -----------------
+    def stream_batches(
+        self,
+        ids: Iterable[int],
+        batch_size: int,
+        *,
+        prepare: Callable[[int, np.ndarray], np.ndarray] | None = None,
+        transform: Callable[[np.ndarray], np.ndarray] | None = None,
+        drop_last: bool = True,
+    ) -> Iterator[np.ndarray]:
+        """Assemble ``batch_size``-record batches from the records of the
+        block-id stream ``ids`` (finite or infinite), prefetching blocks
+        ahead.  ``prepare(block_id, block)`` runs on the workers (e.g.
+        within-block permutation); ``transform`` runs on each built batch.
+        """
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        it = iter(ids)
+        window: collections.deque[Future] = collections.deque()
+
+        def submit_one() -> None:
+            for b in it:
+                fn = None if prepare is None else (lambda block, _b=b: prepare(_b, block))
+                window.append(self.fetch_async(b, fn))
+                return
+
+        pending: list[np.ndarray] = []
+        have = 0
+        try:
+            for _ in range(self.prefetch + 1):
+                submit_one()
+            while window:
+                fut = window.popleft()
+                arr = np.asarray(fut.result())
+                submit_one()
+                pending.append(arr)
+                have += arr.shape[0]
+                while have >= batch_size:
+                    batch, pending, have = _assemble(pending, have, batch_size)
+                    yield transform(batch) if transform is not None else batch
+            if have > 0 and not drop_last:
+                batch = np.concatenate(pending, axis=0)
+                yield transform(batch) if transform is not None else batch
+        finally:
+            for fut in window:
+                fut.cancel()
+
+
+def _assemble(
+    pending: list[np.ndarray], have: int, batch_size: int
+) -> tuple[np.ndarray, list[np.ndarray], int]:
+    """Split ``batch_size`` records off the front of ``pending``."""
+    out: list[np.ndarray] = []
+    need = batch_size
+    while need > 0:
+        head = pending[0]
+        if head.shape[0] <= need:
+            out.append(head)
+            need -= head.shape[0]
+            pending = pending[1:]
+        else:
+            out.append(head[:need])
+            pending = [head[need:]] + pending[1:]
+            need = 0
+    return np.concatenate(out, axis=0), pending, have - batch_size

@@ -131,14 +131,54 @@ def summarize_blocks(
     ]
 
 
-def combine_summaries(summaries: Sequence[BlockSummary]) -> MomentStats:
-    """Exact corpus-level moments from block sketches alone (no data reads)."""
+def combine_summaries(
+    summaries: Sequence[BlockSummary],
+    *,
+    weights: Sequence[float] | np.ndarray | None = None,
+    total_count: int | None = None,
+) -> MomentStats:
+    """Corpus-level moments from block sketches alone (no data reads).
+
+    Without ``weights`` this is the exact Chan-style parallel combine over the
+    given sketches.  With ``weights`` (one per sketch, e.g. from
+    ``SamplingPolicy.weights``) it is the Horvitz-Thompson estimate for a
+    non-uniform block-level sample: block totals are expanded by their weight
+    (``sum_k w_k * t_k`` estimates the corpus total), which undoes the
+    selection bias of weighted/stratified policies.  Pass ``total_count``
+    (the corpus record count ``N``, known from ``RSPSpec``) to normalize the
+    mean by the true ``N`` -- the estimator is then exactly unbiased;
+    otherwise the HT-estimated count is used (self-normalized / Hajek form).
+    ``min``/``max`` are taken over the sampled sketches only.
+    """
     if not summaries:
         raise ValueError("need at least one block summary")
-    acc = summaries[0].moments()
-    for s in summaries[1:]:
-        acc = combine_moments(acc, s.moments())
-    return acc
+    if weights is None:
+        acc = summaries[0].moments()
+        for s in summaries[1:]:
+            acc = combine_moments(acc, s.moments())
+        return acc
+    w = np.asarray(weights, dtype=np.float64)
+    if w.shape != (len(summaries),) or np.any(w < 0):
+        raise ValueError("weights must be non-negative, one per summary")
+    counts = np.array([s.count for s in summaries], dtype=np.float64)
+    means = np.stack([s.mean for s in summaries])
+    m2s = np.stack([s.m2 for s in summaries])
+    count_hat = float((w * counts).sum())
+    n = float(total_count) if total_count is not None else count_hat
+    if n <= 0:
+        raise ValueError("estimated/total count must be positive")
+    sum_hat = (w[:, None] * counts[:, None] * means).sum(axis=0)
+    # HT estimate of the corpus sum of squares: per block, sum x^2 = m2 + c*mean^2
+    sumsq_hat = (w[:, None] * (m2s + counts[:, None] * means**2)).sum(axis=0)
+    mean = sum_hat / n
+    m2 = np.maximum(sumsq_hat - n * mean**2, 0.0)
+    return MomentStats(
+        count=n,
+        mean=mean,
+        m2=m2,
+        min=np.min([s.min for s in summaries], axis=0),
+        max=np.max([s.max for s in summaries], axis=0),
+    )
 
 
 def max_divergence_from_summaries(summaries: Sequence[BlockSummary]) -> float:

@@ -96,3 +96,149 @@ def test_loader_transform(store):
     b1 = loader.next_batch()
     loader2 = RSPLoader(BlockSource(store=s), batch_size=10, seed=0)
     np.testing.assert_allclose(b1, loader2.next_batch() * 2.0)
+
+
+def test_loader_resume_across_epoch_boundary(store):
+    # 2048 records, batch 192 -> the epoch boundary falls inside batch 11;
+    # checkpoint right before it and verify exact-batch equivalence after.
+    s, _, _ = store
+    ref = RSPLoader(BlockSource(store=s), batch_size=192, seed=11)
+    ref_batches = [ref.next_batch() for _ in range(16)]
+
+    live = RSPLoader(BlockSource(store=s), batch_size=192, seed=11)
+    for _ in range(10):
+        live.next_batch()
+    state = live.state_dict()
+    assert state["pool"]  # open-pool entries ride along in the checkpoint
+
+    resumed = RSPLoader(BlockSource(store=s), batch_size=192, seed=11)
+    resumed.load_state_dict(state)
+    for i in range(10, 16):
+        np.testing.assert_array_equal(resumed.next_batch(), ref_batches[i])
+
+
+def test_loader_resume_is_pool_bounded(store, monkeypatch):
+    # Resume must reload only the open-pool blocks, not replay the history.
+    s, _, _ = store
+    live = RSPLoader(BlockSource(store=s), batch_size=64, seed=3, prefetch=0)
+    for _ in range(12):
+        live.next_batch()
+    state = live.state_dict()
+
+    loads: list[int] = []
+    orig = BlockSource.load
+
+    def spying(self, block_id):
+        loads.append(block_id)
+        return orig(self, block_id)
+
+    monkeypatch.setattr(BlockSource, "load", spying)
+    resumed = RSPLoader(BlockSource(store=s), batch_size=64, seed=3, prefetch=0)
+    resumed.load_state_dict(state)
+    assert sorted(loads) == sorted(e["block_id"] for e in state["pool"])
+
+
+def test_loader_resume_self_contained_seed(store):
+    # the checkpoint carries the permutation seed: a loader constructed with
+    # a different seed still resumes the original stream exactly
+    s, _, _ = store
+    ref = RSPLoader(BlockSource(store=s), batch_size=64, seed=7)
+    ref_batches = [ref.next_batch() for _ in range(10)]
+    live = RSPLoader(BlockSource(store=s), batch_size=64, seed=7)
+    for _ in range(4):
+        live.next_batch()
+    state = live.state_dict()
+
+    resumed = RSPLoader(BlockSource(store=s), batch_size=64, seed=0)  # wrong seed
+    resumed.load_state_dict(state)
+    for i in range(4, 10):
+        np.testing.assert_array_equal(resumed.next_batch(), ref_batches[i])
+
+
+def test_loader_legacy_state_replays(store):
+    # v1 checkpoints (sampler seed + consumed count, no pool) still resume
+    s, _, _ = store
+    ref = RSPLoader(BlockSource(store=s), batch_size=64, seed=7)
+    ref_batches = [ref.next_batch() for _ in range(8)]
+    legacy = {"sampler": {"seed": 7, "epoch": 0, "cursor": 0}, "consumed_batches": 5}
+    resumed = RSPLoader(BlockSource(store=s), batch_size=64, seed=7)
+    resumed.load_state_dict(legacy)
+    for i in range(5, 8):
+        np.testing.assert_array_equal(resumed.next_batch(), ref_batches[i])
+
+
+def test_loader_worker_exception_propagates(store):
+    s, _, _ = store
+    calls = {"n": 0}
+
+    class FlakySource(BlockSource):
+        def load(self, block_id):
+            calls["n"] += 1
+            if calls["n"] > 2:
+                raise RuntimeError("store went away")
+            return super().load(block_id)
+
+    loader = RSPLoader(FlakySource(store=s), batch_size=64, seed=0, prefetch=2)
+    with pytest.raises(RuntimeError, match="store went away"):
+        for _ in range(64):
+            loader.next_batch()
+    loader.close()
+
+
+def test_prefetch_loader_exception_propagates(store):
+    # regression: a worker exception used to be swallowed, leaving
+    # next_batch() blocked forever
+    s, _, _ = store
+    calls = {"n": 0}
+
+    class FlakySource(BlockSource):
+        def load(self, block_id):
+            calls["n"] += 1
+            if calls["n"] > 2:
+                raise RuntimeError("worker died")
+            return super().load(block_id)
+
+    pf = PrefetchLoader(RSPLoader(FlakySource(store=s), batch_size=64, seed=0), depth=2)
+    try:
+        with pytest.raises(RuntimeError, match="worker died"):
+            for _ in range(64):
+                pf.next_batch()
+    finally:
+        pf.close()
+
+
+def test_prefetch_loader_close_releases_inner_loader(store):
+    s, _, _ = store
+    inner = RSPLoader(BlockSource(store=s), batch_size=50, seed=3, prefetch=2)
+    pf = PrefetchLoader(inner, depth=2)
+    pf.next_batch()
+    pf.close()
+    assert inner._executor._pool is None  # engine workers released
+    assert not inner._pool  # no in-flight block fetches left behind
+
+
+def test_loader_policy_stream_and_resume(store):
+    s, _, _ = store
+    ref = RSPLoader(BlockSource(store=s), batch_size=64, seed=5, policy="weighted")
+    ref_batches = [ref.next_batch() for _ in range(8)]
+    assert all(b.shape == (64, 5) for b in ref_batches)
+
+    live = RSPLoader(BlockSource(store=s), batch_size=64, seed=5, policy="weighted")
+    for _ in range(3):
+        live.next_batch()
+    state = live.state_dict()
+    assert state["policy"]["kind"] == "weighted"
+    resumed = RSPLoader(BlockSource(store=s), batch_size=64, seed=5, policy="weighted")
+    resumed.load_state_dict(state)
+    for i in range(3, 8):
+        np.testing.assert_array_equal(resumed.next_batch(), ref_batches[i])
+
+    mismatched = RSPLoader(BlockSource(store=s), batch_size=64, seed=5)
+    with pytest.raises(ValueError, match="policy"):
+        mismatched.load_state_dict(state)
+
+    # legacy (v1) states are uniform-only: no silent policy downgrade
+    legacy = {"sampler": {"seed": 5, "epoch": 0, "cursor": 0}, "consumed_batches": 1}
+    fresh = RSPLoader(BlockSource(store=s), batch_size=64, seed=5, policy="weighted")
+    with pytest.raises(ValueError, match="uniform-only"):
+        fresh.load_state_dict(legacy)
