@@ -12,6 +12,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Row = tuple[str, float, str]
 
@@ -97,4 +98,27 @@ def bench_ssd_and_wkv() -> list[Row]:
     return rows
 
 
-ALL_KERNELS = [bench_flash_attention, bench_rsp_shuffle, bench_ssd_and_wkv]
+def bench_block_sketch() -> list[Row]:
+    from repro.kernels.block_sketch import block_sketch
+    from repro.kernels.block_sketch.kernel import block_sketch_pallas
+
+    rows = []
+    n, f, bins = 16_384, 16, 128
+    x = jax.random.normal(jax.random.PRNGKey(4), (n, f), jnp.float32) * 2.0 + 1.5
+    lo = jnp.full((f,), -8.0)
+    inv_w = jnp.full((f,), bins / 16.0)
+    gb = n * f * 4 / 1e9
+    us = _timeit(
+        lambda: jax.block_until_ready(
+            block_sketch_pallas(x, lo, inv_w, bins=bins, tile_rows=512)[0]
+        ),
+        repeat=1,
+    )
+    rows.append(("block_sketch_pallas_interp_16k", us, f"gbps={gb / (us / 1e6):.3f}"))
+    xs = np.asarray(x)
+    us = _timeit(lambda: block_sketch(xs, bins=bins, lo=-8.0, hi=8.0, impl="jax"))
+    rows.append(("block_sketch_jax_fused_16k", us, f"gbps={gb / (us / 1e6):.3f}"))
+    return rows
+
+
+ALL_KERNELS = [bench_flash_attention, bench_rsp_shuffle, bench_ssd_and_wkv, bench_block_sketch]

@@ -28,7 +28,8 @@ API map (paper reference in parentheses):
                (sketch-guided block selection + HT reweighting)
   estimation   BlockLevelEstimator, MomentStats, block_moments,
                combine_moments, batched_block_moments, block_histogram,
-               quantile_from_histogram (Sec. 8)
+               quantile_from_histogram (Sec. 8); the declarative progressive
+               query layer (anytime CIs, early stopping) is repro.rsp.query
   ensemble     BaseLearner, make_logreg, make_mlp, Ensemble,
                train_base_models_vmapped, asymptotic_ensemble_learn,
                ensemble_vs_single_model (Sec. 9, Algorithm 2)

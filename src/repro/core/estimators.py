@@ -152,27 +152,38 @@ def batched_block_moments(blocks: Array) -> tuple[Array, Array]:
     return jax.vmap(one)(blocks)
 
 
-def block_histogram(block: Array, *, bins: int, lo: float, hi: float) -> np.ndarray:
-    """Fixed-grid histogram per feature; combinable by addition (for
-    block-level quantile estimation)."""
-    x = np.asarray(block).reshape(block.shape[0], -1)
-    out = np.empty((x.shape[1], bins), dtype=np.int64)
-    edges = np.linspace(lo, hi, bins + 1)
-    for j in range(x.shape[1]):
-        out[j], _ = np.histogram(x[:, j], bins=edges)
-    return out
+def block_histogram(block: Array, *, bins: int, lo, hi) -> np.ndarray:
+    """Fixed-grid histogram per feature [F, bins]; combinable by addition (for
+    block-level quantile estimation).  ``lo`` / ``hi`` are scalars or
+    per-feature arrays.  Mass outside ``[lo, hi]`` is clipped into the edge
+    bins -- every histogram sums to the block's record count, so merged
+    histograms stay consistent with merged counts (values beyond the grid
+    used to be dropped silently, biasing tail quantiles inward)."""
+    from repro.kernels.block_sketch.ref import _grid, grid_histogram
+
+    x = np.asarray(block, dtype=np.float64).reshape(np.shape(block)[0], -1)
+    glo, ghi = _grid(lo, hi, x.shape[1])
+    return grid_histogram(x, glo, ghi, bins)
 
 
 def quantile_from_histogram(
-    hist: np.ndarray, qs: Sequence[float], *, lo: float, hi: float
+    hist: np.ndarray, qs: Sequence[float], *, lo, hi
 ) -> np.ndarray:
-    """Approximate per-feature quantiles from a combined histogram."""
-    bins = hist.shape[-1]
-    edges = np.linspace(lo, hi, bins + 1)
-    cdf = np.cumsum(hist, axis=-1)
-    total = cdf[..., -1:]
-    out = np.empty((hist.shape[0], len(qs)), dtype=np.float64)
-    for qi, q in enumerate(qs):
-        idx = np.argmax(cdf >= q * total, axis=-1)
-        out[:, qi] = edges[idx + 1]
-    return out
+    """Per-feature quantiles [F, Q] from a combined histogram [F, bins],
+    linearly interpolated *within* the covering bin (quantiles used to snap
+    to the bin's upper edge, a +half-bin-width bias).  ``lo`` / ``hi`` are
+    scalars or per-feature arrays matching the histogram's grid."""
+    hist = np.asarray(hist, dtype=np.float64)
+    f, bins = hist.shape
+    lo = np.broadcast_to(np.asarray(lo, dtype=np.float64), (f,))
+    hi = np.broadcast_to(np.asarray(hi, dtype=np.float64), (f,))
+    width = (hi - lo) / bins                                     # [F]
+    qs = np.asarray(qs, dtype=np.float64)
+    cdf = np.cumsum(hist, axis=-1)                               # [F, bins]
+    total = np.maximum(cdf[:, -1:], 1.0)                         # [F, 1]
+    target = qs[None, :] * total                                 # [F, Q]
+    idx = np.argmax(cdf[:, None, :] >= target[:, :, None], axis=-1)  # [F, Q]
+    below = np.where(idx > 0, np.take_along_axis(cdf, np.maximum(idx - 1, 0), 1), 0.0)
+    in_bin = np.take_along_axis(hist, idx, axis=1)               # [F, Q]
+    frac = np.clip((target - below) / np.maximum(in_bin, 1e-300), 0.0, 1.0)
+    return lo[:, None] + (idx + frac) * width[:, None]

@@ -1,0 +1,29 @@
+"""Fused per-block sketch kernel: one pass -> moments + extrema + histogram.
+
+The query subsystem's per-block hot loop (``repro.rsp.query``) and the
+partition-time summaries both reduce to this sketch; ``ops.block_sketch``
+dispatches between the numpy oracle, the jit'd jax path, and the Pallas TPU
+kernel (``ref.py`` / ``ops.py`` / ``kernel.py``).
+"""
+
+from repro.kernels.block_sketch.ops import (
+    IMPLS,
+    batched_block_sketch,
+    block_sketch,
+)
+from repro.kernels.block_sketch.ref import (
+    BlockSketch,
+    block_sketch_ref,
+    grid_histogram,
+    merge_sketches,
+)
+
+__all__ = [
+    "IMPLS",
+    "BlockSketch",
+    "batched_block_sketch",
+    "block_sketch",
+    "block_sketch_ref",
+    "grid_histogram",
+    "merge_sketches",
+]

@@ -1,0 +1,124 @@
+"""jit'd wrappers and the impl dispatcher for the fused block sketch.
+
+Three equivalent paths (``1e-5``-agreeing on the same block; the one caveat
+is values lying *exactly on a bin edge* -- discrete/integer columns -- which
+the float32 jax/pallas paths and the float64 ref path may assign to adjacent
+bins, moving a downstream quantile by at most one bin width):
+
+* ``impl="ref"``    -- plain numpy (float64), the oracle.
+* ``impl="jax"``    -- one jit'd fused pass (scatter-add histogram); vmap'd
+  batch variant for stacked blocks.
+* ``impl="pallas"`` -- the tiled TPU kernel (interpret=True off-TPU), moments
+  folded Chan-style across row tiles in VMEM.
+
+``impl="auto"`` picks the numpy oracle on CPU hosts (XLA's scatter-add
+histogram lowers poorly there) and the jit'd jax path on accelerators,
+mirroring the partition backend registry's capability-predicate style.  All
+paths return the numpy :class:`~repro.kernels.block_sketch.ref.BlockSketch`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_sketch.kernel import block_sketch_pallas
+from repro.kernels.block_sketch.ref import BlockSketch, _grid, block_sketch_ref
+
+IMPLS = ("auto", "ref", "jax", "pallas")
+
+
+@functools.partial(jax.jit, static_argnames=("bins",))
+def _sketch_jax(x: jax.Array, lo: jax.Array, inv_width: jax.Array, *, bins: int):
+    """Fused one-pass sketch of ``x`` [n, F]; returns (mean, m2, min, max,
+    hist) with ``hist`` empty when ``bins == 0``."""
+    x = x.astype(jnp.float32)
+    n, f = x.shape
+    mean = x.mean(axis=0)
+    m2 = ((x - mean) ** 2).sum(axis=0)
+    mn = x.min(axis=0)
+    mx = x.max(axis=0)
+    if bins == 0:
+        return mean, m2, mn, mx, jnp.zeros((f, 0), jnp.float32)
+    idx = jnp.clip(jnp.floor((x - lo) * inv_width).astype(jnp.int32), 0, bins - 1)
+    flat = idx + jnp.arange(f, dtype=jnp.int32) * bins
+    hist = jnp.zeros((f * bins,), jnp.float32).at[flat.ravel()].add(1.0)
+    return mean, m2, mn, mx, hist.reshape(f, bins)
+
+
+@functools.partial(jax.jit, static_argnames=("bins",))
+def batched_block_sketch(blocks: jax.Array, lo: jax.Array, inv_width: jax.Array, *, bins: int):
+    """vmap'd fused sketch for stacked blocks [g, n, F] -> per-block sketches."""
+    return jax.vmap(lambda b: _sketch_jax(b, lo, inv_width, bins=bins))(blocks)
+
+
+def _inv_width(lo: np.ndarray, hi: np.ndarray, bins: int) -> np.ndarray:
+    width = (hi - lo) / max(bins, 1)
+    return np.where(width > 0, 1.0 / np.where(width > 0, width, 1.0), 0.0)
+
+
+def block_sketch(
+    block,
+    *,
+    bins: int = 0,
+    lo=0.0,
+    hi=1.0,
+    impl: str = "auto",
+    tile_rows: int = 128,
+    interpret: bool = True,
+) -> BlockSketch:
+    """Fused sketch of one block (any shape ``[n, ...]``; features flatten).
+
+    ``bins=0`` skips the histogram (moments-only fast path; ref/jax only --
+    the Pallas kernel always produces a histogram, so ``impl="pallas"`` needs
+    ``bins >= 1``).  ``lo`` / ``hi`` are scalars or per-feature arrays.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r} (one of {IMPLS})")
+    if impl == "auto":
+        impl = "ref" if jax.default_backend() == "cpu" else "jax"
+    if impl == "ref":
+        return block_sketch_ref(block, bins=bins, lo=lo, hi=hi)
+    x = np.asarray(block, dtype=np.float32).reshape(np.shape(block)[0], -1)
+    glo, ghi = _grid(lo, hi, x.shape[1])
+    if impl == "pallas":
+        if bins < 1:
+            raise ValueError("impl='pallas' needs bins >= 1")
+        stats, hist = block_sketch_pallas(
+            jnp.asarray(x),
+            jnp.asarray(glo),
+            jnp.asarray(_inv_width(glo, ghi, bins)),
+            bins=bins,
+            tile_rows=tile_rows,
+            interpret=interpret,
+        )
+        stats = np.asarray(stats, dtype=np.float64)
+        return BlockSketch(
+            count=float(stats[0, 0]),
+            mean=stats[1],
+            m2=stats[2],
+            min=stats[3],
+            max=stats[4],
+            hist=np.asarray(np.rint(np.asarray(hist)), dtype=np.int64),
+            lo=glo,
+            hi=ghi,
+        )
+    mean, m2, mn, mx, hist = _sketch_jax(
+        jnp.asarray(x),
+        jnp.asarray(glo, dtype=jnp.float32),
+        jnp.asarray(_inv_width(glo, ghi, bins), dtype=jnp.float32),
+        bins=bins,
+    )
+    return BlockSketch(
+        count=float(x.shape[0]),
+        mean=np.asarray(mean, dtype=np.float64),
+        m2=np.asarray(m2, dtype=np.float64),
+        min=np.asarray(mn, dtype=np.float64),
+        max=np.asarray(mx, dtype=np.float64),
+        hist=None if bins == 0 else np.asarray(np.rint(np.asarray(hist)), np.int64),
+        lo=None if bins == 0 else glo,
+        hi=None if bins == 0 else ghi,
+    )

@@ -1,0 +1,108 @@
+"""Oracle: the fused per-block sketch as plain numpy.
+
+One conceptual pass over a block ``[n, ...]`` produces everything the query
+layer needs from it: record count, per-feature mean / M2 / extrema
+(Chan-combinable moments) and a per-feature fixed-grid histogram.  Mass
+outside ``[lo, hi]`` is *clipped into the edge bins* -- the histogram always
+sums to ``n`` per feature, so merged histograms stay consistent with the
+merged counts (the silent-mass-drop bias the old ``block_histogram`` had).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BlockSketch:
+    """Combinable one-pass sketch of a single RSP block.
+
+    ``hist`` is ``None`` when the sketch was computed with ``bins=0``
+    (moments-only fast path).  ``lo`` / ``hi`` record the per-feature grid the
+    histogram was computed on; sketches combine only on identical grids.
+    """
+
+    count: float
+    mean: np.ndarray                  # [F]
+    m2: np.ndarray                    # [F] sum of squared deviations
+    min: np.ndarray                   # [F]
+    max: np.ndarray                   # [F]
+    hist: np.ndarray | None = None    # [F, bins] counts
+    lo: np.ndarray | None = None      # [F] grid lower edges
+    hi: np.ndarray | None = None      # [F] grid upper edges
+
+    @property
+    def variance(self) -> np.ndarray:
+        return self.m2 / max(self.count - 1.0, 1.0)
+
+    @property
+    def sum(self) -> np.ndarray:
+        return self.count * self.mean
+
+
+def merge_sketches(a: BlockSketch, b: BlockSketch) -> BlockSketch:
+    """Chan-style parallel combine of two sketches (histograms add)."""
+    n = a.count + b.count
+    if n <= 0:
+        return a
+    delta = b.mean - a.mean
+    hist = None
+    if a.hist is not None and b.hist is not None:
+        hist = a.hist + b.hist
+    return BlockSketch(
+        count=n,
+        mean=a.mean + delta * (b.count / n),
+        m2=a.m2 + b.m2 + delta**2 * (a.count * b.count / n),
+        min=np.minimum(a.min, b.min),
+        max=np.maximum(a.max, b.max),
+        hist=hist,
+        lo=a.lo,
+        hi=a.hi,
+    )
+
+
+def _grid(lo, hi, num_features: int) -> tuple[np.ndarray, np.ndarray]:
+    lo = np.broadcast_to(np.asarray(lo, dtype=np.float64), (num_features,)).copy()
+    hi = np.broadcast_to(np.asarray(hi, dtype=np.float64), (num_features,)).copy()
+    return lo, hi
+
+
+def grid_histogram(
+    x: np.ndarray, lo: np.ndarray, hi: np.ndarray, bins: int
+) -> np.ndarray:
+    """Vectorized per-feature fixed-grid histogram of ``x`` [n, F] with
+    out-of-range mass clipped into the edge bins."""
+    n, f = x.shape
+    width = (hi - lo) / bins
+    safe = np.where(width > 0, width, 1.0)
+    idx = np.clip(np.floor((x - lo) / safe).astype(np.int64), 0, bins - 1)
+    flat = idx + np.arange(f, dtype=np.int64) * bins
+    return np.bincount(flat.ravel(), minlength=f * bins).reshape(f, bins)
+
+
+def block_sketch_ref(
+    block: np.ndarray,
+    *,
+    bins: int = 0,
+    lo=0.0,
+    hi=1.0,
+    dtype=np.float64,
+) -> BlockSketch:
+    """Reference fused sketch: moments + extrema (+ fixed-grid histogram when
+    ``bins > 0``) of one block, flattened to ``[n, F]``."""
+    x = np.asarray(block, dtype=dtype).reshape(np.shape(block)[0], -1)
+    mean = x.mean(axis=0)
+    m2 = ((x - mean) ** 2).sum(axis=0)
+    sketch = BlockSketch(
+        count=float(x.shape[0]),
+        mean=mean,
+        m2=m2,
+        min=x.min(axis=0),
+        max=x.max(axis=0),
+    )
+    if bins > 0:
+        sketch.lo, sketch.hi = _grid(lo, hi, x.shape[1])
+        sketch.hist = grid_histogram(x, sketch.lo, sketch.hi, bins)
+    return sketch

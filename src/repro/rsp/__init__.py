@@ -9,6 +9,8 @@ One import surface for the paper's whole workflow::
     ds = rsp.open("/data/corpus.rsp")            # lazy re-open
     ids = ds.sample(5, seed=7)                   # block-level sample (Def. 4)
     stats = ds.moments(g=5)                      # Sec. 8, from block sketches
+    res = ds.query(["mean", "p95"], target_rel_err=0.01)   # anytime CIs,
+    #   stops early; moment-only queries answer from sketches (0 reads)
     ens, hist = ds.ensemble(rsp.make_logreg(28, 2), eval_x=xe, eval_y=ye, g=5)
     mmd = ds.similarity(3, metric="mmd")         # Sec. 7 diagnostics
 
@@ -46,10 +48,20 @@ from repro.core.types import RSPSpec
 from repro.rsp.engine import (
     BlockExecutor,
     BlockFetcher,
+    ExecutorStats,
     MemoryFetcher,
     MmapFetcher,
     StoreFetcher,
     as_fetcher,
+)
+from repro.rsp.query import (
+    Aggregate,
+    AggregateResult,
+    Query,
+    QueryExecutor,
+    QueryResult,
+    as_query,
+    parse_aggregate,
 )
 from repro.rsp.backends import (
     AUTO,
@@ -77,6 +89,8 @@ open = RSPDataset.open  # noqa: A001 -- facade verb, mirrors gzip.open
 __all__ = [
     "AUTO",
     "POLICIES",
+    "Aggregate",
+    "AggregateResult",
     "BaseLearner",
     "BlockExecutor",
     "BlockFetcher",
@@ -85,12 +99,16 @@ __all__ = [
     "BlockSummary",
     "Ensemble",
     "EnsembleHistory",
+    "ExecutorStats",
     "HostAssignment",
     "MemoryFetcher",
     "MmapFetcher",
     "MomentStats",
     "PartitionBackend",
     "PartitionRequest",
+    "Query",
+    "QueryExecutor",
+    "QueryResult",
     "RSPDataset",
     "RSPSpec",
     "SamplingPolicy",
@@ -99,6 +117,7 @@ __all__ = [
     "UniformPolicy",
     "WeightedPolicy",
     "as_fetcher",
+    "as_query",
     "available_backends",
     "backend_eligibility",
     "combine_summaries",
@@ -108,6 +127,7 @@ __all__ = [
     "make_policy",
     "max_divergence_from_summaries",
     "open",
+    "parse_aggregate",
     "partition",
     "register_backend",
     "run_partition",

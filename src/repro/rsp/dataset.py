@@ -239,6 +239,12 @@ class RSPDataset:
             self._summaries = self._compute_summaries()
         return self._summaries
 
+    @property
+    def has_summaries(self) -> bool:
+        """Whether partition-time sketches are already materialized (without
+        triggering the full-corpus pass that computes them)."""
+        return self._summaries is not None
+
     def _compute_summaries(self) -> list[BlockSummary]:
         label_column = self.label_column if self.num_classes is not None else None
         return summarize_blocks(
@@ -410,6 +416,35 @@ class RSPDataset:
         values = [np.asarray(v) for v in self.executor.map_blocks(fn, ids)]
         weights = pol.weights(ids) if pol is not None else None
         return np.average(values, axis=0, weights=weights)
+
+    # ------------------------------------------------------------------
+    # Declarative queries (progressive, anytime CIs)
+    # ------------------------------------------------------------------
+    def query(self, aggregates="mean", **kwargs):
+        """Answer a declarative aggregate query with anytime confidence
+        intervals, reading as few blocks as the stopping rule allows.
+
+        ``aggregates`` is a ``Query``, an aggregate spec (``"mean"``,
+        ``"p95"``, ``Aggregate("quantile", q=0.5, by_label=True)``, ...), or
+        a sequence of specs; stopping-rule kwargs (``target_rel_err=``,
+        ``confidence=``, ``max_blocks=``, ``policy=``, ...) are forwarded to
+        :class:`repro.rsp.query.Query`.  Moment/label-count-only queries are
+        answered from the partition-time sketches with zero block reads;
+        everything else streams blocks through the executor and stops early
+        once every CI is tighter than ``target_rel_err``.  Returns the final
+        :class:`repro.rsp.query.QueryResult`.
+        """
+        from repro.rsp.query import QueryExecutor, as_query
+
+        return QueryExecutor(self, as_query(aggregates, **kwargs)).run()
+
+    def query_stream(self, aggregates="mean", **kwargs):
+        """Progressive variant of :meth:`query`: yields one anytime
+        ``QueryResult`` per block read (a single result for sketch-only
+        queries), so callers can watch the intervals narrow."""
+        from repro.rsp.query import QueryExecutor, as_query
+
+        return QueryExecutor(self, as_query(aggregates, **kwargs)).stream()
 
     # ------------------------------------------------------------------
     # Ensemble learning (Sec. 9, Algorithm 2)

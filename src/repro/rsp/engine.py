@@ -30,12 +30,16 @@ consumers don't have to:
 
 With ``prefetch=0`` the executor degrades to a plain synchronous loop (no
 threads), which is the reference behavior the pipeline is tested against.
-``benchmarks/engine_bench.py`` measures the three fetch paths.
+``executor.stats()`` exposes hit/miss/eviction counters and the total
+blocks-fetched count, so consumers (e.g. ``repro.rsp.query``) can report how
+many blocks an answer actually touched.  ``benchmarks/engine_bench.py``
+measures the three fetch paths.
 """
 
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, runtime_checkable
@@ -43,6 +47,34 @@ from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, runtim
 import numpy as np
 
 from repro.core.registry import RSPStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorStats:
+    """Counters for one :class:`BlockExecutor`'s block movement.
+
+    ``hits`` / ``misses`` are LRU-cache outcomes (with the cache disabled
+    every access is a miss); ``evictions`` counts LRU drops;
+    ``blocks_fetched`` is the total number of blocks pulled from the
+    underlying fetcher -- the honest I/O count behind a query's "answered
+    from N of K blocks" claim.  Snapshots subtract, so a consumer can report
+    only its own window: ``after - before``.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def blocks_fetched(self) -> int:
+        return self.misses
+
+    def __sub__(self, other: "ExecutorStats") -> "ExecutorStats":
+        return ExecutorStats(
+            hits=self.hits - other.hits,
+            misses=self.misses - other.misses,
+            evictions=self.evictions - other.evictions,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +207,9 @@ class BlockExecutor:
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
         self._cache_cap = max(0, int(cache_blocks))
         self._cache_lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
         if self.prefetch > 0:
             n = workers if workers is not None else min(self.prefetch, 8)
             self._pool: ThreadPoolExecutor | None = ThreadPoolExecutor(
@@ -208,17 +243,33 @@ class BlockExecutor:
         with self._cache_lock:
             if block_id in self._cache:
                 self._cache.move_to_end(block_id)
+                self._hits += 1
                 return self._cache[block_id]
         block = self.fetcher.fetch(block_id)
         if isinstance(block, np.ndarray):
             block.setflags(write=False)
-        if self._cache_cap > 0:
-            with self._cache_lock:
+        with self._cache_lock:
+            self._misses += 1
+            if self._cache_cap > 0:
                 self._cache[block_id] = block
                 self._cache.move_to_end(block_id)
                 while len(self._cache) > self._cache_cap:
                     self._cache.popitem(last=False)
+                    self._evictions += 1
         return block
+
+    def stats(self) -> ExecutorStats:
+        """Snapshot of the hit/miss/eviction counters (see
+        :class:`ExecutorStats`); subtract two snapshots to meter one
+        consumer's window."""
+        with self._cache_lock:
+            return ExecutorStats(
+                hits=self._hits, misses=self._misses, evictions=self._evictions
+            )
+
+    def reset_stats(self) -> None:
+        with self._cache_lock:
+            self._hits = self._misses = self._evictions = 0
 
     def fetch_async(
         self, block_id: int, fn: Callable[[np.ndarray], Any] | None = None

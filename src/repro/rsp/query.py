@@ -1,0 +1,760 @@
+"""``repro.rsp.query`` -- progressive approximate queries over RSP blocks.
+
+The paper's central claim is that analysis of a big data set becomes
+analysis of a few RSP blocks.  This module makes that loop explicit: a
+:class:`Query` *declares* what is wanted -- aggregates (``mean`` / ``var`` /
+``sum`` / ``count`` / ``quantile`` / ``histogram``, optionally grouped by
+label) plus a stopping rule (``target_rel_err``, ``confidence``,
+``max_blocks``) -- and :class:`QueryExecutor` decides how many blocks to
+read:
+
+* **Sketch fast path** -- a query that needs only moments or label counts is
+  answered from the partition-time sketches alone: *zero* block reads, and
+  the answer is the exact corpus statistic (the sketches combine exactly).
+* **Progressive path** -- otherwise blocks stream one at a time through the
+  dataset's prefetching :class:`~repro.rsp.engine.BlockExecutor` under a
+  :class:`~repro.core.sampler.SamplingPolicy`.  Each block is folded through
+  the fused one-pass sketch kernel (``repro.kernels.block_sketch``) into
+  combinable per-aggregate state -- Chan moments for ``mean``/``var``/
+  ``sum``/``count``, mergeable fixed-grid histograms for ``quantile``/
+  ``histogram`` -- and after every block an *anytime* :class:`QueryResult`
+  is emitted with confidence intervals.  The stream stops early once every
+  interval is relatively tighter than ``target_rel_err``.
+
+Confidence intervals follow the consistency framework of block-level
+estimates (Karmakar & Mukhopadhyay, 2018): each RSP block is a random sample
+of the corpus, so per-block estimates are i.i.d. and a CLT *across blocks*
+applies -- Student-t intervals over the ``b`` per-block estimates, with a
+finite-population correction under uniform without-replacement sampling.
+Quantile intervals bootstrap over the per-block histograms (resample blocks
+with replacement, re-merge, re-invert the CDF).  Under the ``weighted`` PPS
+policy the per-draw estimates are Hansen-Hurwitz expansions (``t_k / p_k``),
+which are i.i.d. by construction; ``stratified`` single-block draws are
+marginally uniform-with-replacement and are treated as such (approximate).
+
+Entry points: ``RSPDataset.query(...)`` (final result) and
+``RSPDataset.query_stream(...)`` (one :class:`QueryResult` per block read).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.core.estimators import quantile_from_histogram
+from repro.core.sampler import SamplingPolicy, UniformPolicy, WeightedPolicy
+from repro.kernels.block_sketch import BlockSketch, block_sketch
+from repro.rsp.engine import ExecutorStats
+
+KINDS = ("mean", "var", "sum", "count", "quantile", "histogram")
+_SKETCH_ONLY_KINDS = ("mean", "var", "sum", "count")
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Normal / Student-t quantiles (no scipy dependency)
+# ---------------------------------------------------------------------------
+
+def norm_ppf(p: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation,
+    |err| < 1.2e-8 over (0, 1))."""
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"p must be in (0, 1), got {p}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00)
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        num = ((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]
+        return num / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if p > phigh:
+        return -norm_ppf(1 - p)
+    q = p - 0.5
+    r = q * q
+    num = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q
+    return num / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+
+
+def t_ppf(p: float, df: int) -> float:
+    """Inverse Student-t CDF: exact for df 1-2, Cornish-Fisher expansion in
+    1/df above (plenty for CI construction; ~1% off at df=3, <0.1% by df=8)."""
+    if df <= 0:
+        raise ValueError("df must be positive")
+    if df == 1:
+        return math.tan(math.pi * (p - 0.5))
+    if df == 2:
+        u = 2 * p - 1
+        return u * math.sqrt(2.0 / max(1 - u * u, _EPS))
+    z = norm_ppf(p)
+    v = float(df)
+    return (
+        z
+        + (z**3 + z) / (4 * v)
+        + (5 * z**5 + 16 * z**3 + 3 * z) / (96 * v**2)
+        + (3 * z**7 + 19 * z**5 + 17 * z**3 - 15 * z) / (384 * v**3)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Query declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """One requested aggregate.
+
+    ``feature=None`` returns all (flattened) features; an int selects one
+    column.  ``by_label=True`` computes the aggregate per class (needs
+    ``num_classes`` on the dataset); the result gains a leading class axis.
+    ``quantile`` needs ``q`` in (0, 1).
+    """
+
+    kind: str
+    q: float | None = None
+    feature: int | None = None
+    by_label: bool = False
+    name: str | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown aggregate kind {self.kind!r} (one of {KINDS})")
+        if self.kind == "quantile":
+            if self.q is None or not 0.0 < self.q < 1.0:
+                raise ValueError("quantile aggregates need q in (0, 1)")
+        elif self.q is not None:
+            raise ValueError(f"q= only applies to quantile aggregates, not {self.kind!r}")
+
+    @property
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        s = self.kind if self.q is None else f"p{self.q * 100:g}"
+        if self.feature is not None:
+            s += f"[{self.feature}]"
+        if self.by_label:
+            s += "/label"
+        return s
+
+
+_PCT = re.compile(r"^p(\d{1,2}(?:\.\d+)?)$")
+
+
+def parse_aggregate(spec) -> Aggregate:
+    """``"mean" | "var" | "sum" | "count" | "histogram" | "median" | "p95" |
+    "p99.9"`` -> :class:`Aggregate` (instances pass through)."""
+    if isinstance(spec, Aggregate):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot parse aggregate from {type(spec).__name__}")
+    s = spec.strip().lower()
+    if s in KINDS and s != "quantile":
+        return Aggregate(s)
+    if s == "median":
+        return Aggregate("quantile", q=0.5)
+    m = _PCT.match(s)
+    if m:
+        return Aggregate("quantile", q=float(m.group(1)) / 100.0)
+    raise ValueError(
+        f"cannot parse aggregate {spec!r} (mean | var | sum | count | histogram"
+        f" | median | pNN, or an Aggregate instance)"
+    )
+
+
+@dataclasses.dataclass
+class Query:
+    """A declarative aggregate query plus its stopping rule.
+
+    The stream stops at the first of: every aggregate's relative CI
+    half-width <= ``target_rel_err`` (after ``min_blocks``); ``max_blocks``
+    blocks read (default: one epoch, i.e. all ``K``).  ``histogram``
+    aggregates carry no CI and never drive stopping.  ``use_sketches``:
+    ``"auto"`` answers moment/label-count-only queries from the
+    partition-time sketches when present, ``True`` forces it (error if the
+    query needs block data), ``False`` always streams blocks.
+    """
+
+    aggregates: tuple[Aggregate, ...]
+    target_rel_err: float | None = None
+    confidence: float = 0.95
+    max_blocks: int | None = None
+    min_blocks: int = 3
+    policy: str | SamplingPolicy = "uniform"
+    seed: int = 0
+    bins: int = 128
+    bootstrap: int = 200
+    use_sketches: bool | str = "auto"
+    sketch_impl: str = "auto"
+
+    def __post_init__(self):
+        if not self.aggregates:
+            raise ValueError("query needs at least one aggregate")
+        if not 0.0 < self.confidence < 1.0:
+            raise ValueError("confidence must be in (0, 1)")
+        if self.target_rel_err is not None and self.target_rel_err <= 0:
+            raise ValueError("target_rel_err must be positive")
+        if self.min_blocks < 2:
+            raise ValueError("min_blocks must be >= 2 (CIs need two block estimates)")
+        if self.bins < 1:
+            raise ValueError("bins must be >= 1")
+        if self.bootstrap < 1:
+            raise ValueError("bootstrap must be >= 1")
+
+
+def as_query(spec, **kwargs) -> Query:
+    """Build a :class:`Query` from a ``Query`` (kwargs must be empty), one
+    aggregate spec, or a sequence of aggregate specs."""
+    if isinstance(spec, Query):
+        if kwargs:
+            raise ValueError("pass stopping-rule kwargs inside the Query instance")
+        return spec
+    if isinstance(spec, (str, Aggregate)):
+        spec = [spec]
+    return Query(aggregates=tuple(parse_aggregate(a) for a in spec), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggregateResult:
+    """Anytime estimate of one aggregate.  ``estimate`` / ``ci_lo`` /
+    ``ci_hi`` are scalars, ``[F]``, ``[C]`` or ``[C, F]`` arrays (class axis
+    first for ``by_label``); entries are NaN until observable (e.g. a class
+    not yet seen).  ``rel_err`` is the worst relative CI half-width (None
+    for ``histogram``, inf while fewer than two block estimates exist)."""
+
+    name: str
+    kind: str
+    estimate: np.ndarray | float
+    ci_lo: np.ndarray | float | None
+    ci_hi: np.ndarray | float | None
+    rel_err: float | None
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One anytime answer: the per-aggregate estimates after ``blocks_read``
+    of ``total_blocks`` blocks, plus how the answer was produced
+    (``from_sketches``; ``executor_stats`` meters the query's own cache
+    hits / misses / fetches so "answered from N of K blocks" is honest)."""
+
+    aggregates: tuple[AggregateResult, ...]
+    blocks_read: int
+    total_blocks: int
+    confidence: float
+    target_rel_err: float | None
+    converged: bool
+    from_sketches: bool
+    executor_stats: ExecutorStats | None = None
+
+    def __getitem__(self, name: str) -> AggregateResult:
+        for a in self.aggregates:
+            if a.name == name:
+                return a
+        raise KeyError(f"no aggregate {name!r} in {[a.name for a in self.aggregates]}")
+
+    @property
+    def max_rel_err(self) -> float:
+        errs = [a.rel_err for a in self.aggregates if a.rel_err is not None]
+        return max(errs) if errs else math.inf
+
+    def __str__(self) -> str:
+        how = "sketches" if self.from_sketches else f"{self.blocks_read} blocks"
+        parts = ", ".join(
+            f"{a.name}={np.asarray(a.estimate).ravel()[0]:.4g}"
+            + (f"±{(np.asarray(a.ci_hi) - np.asarray(a.ci_lo)).ravel()[0] / 2:.2g}"
+               if a.ci_lo is not None else "")
+            for a in self.aggregates
+        )
+        return (
+            f"QueryResult({parts}; from {how} of {self.total_blocks},"
+            f" rel_err={self.max_rel_err:.3g}, converged={self.converged})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-aggregate streaming state
+# ---------------------------------------------------------------------------
+
+class _Ctx:
+    """Shared per-query constants handed to every aggregate state."""
+
+    def __init__(self, *, K, N, confidence, uniform, num_classes, bootstrap, seed):
+        self.K = K                      # total blocks
+        self.N = N                      # total records
+        self.confidence = confidence
+        self.uniform = uniform          # uniform w/o replacement -> exact fold + FPC
+        self.num_classes = num_classes
+        self.bootstrap = bootstrap
+        self.seed = seed
+
+    def t_half(self, b: int) -> float:
+        return t_ppf(0.5 + self.confidence / 2.0, b - 1)
+
+    def fpc(self, b: int) -> float:
+        if not self.uniform or self.K <= 1:
+            return 1.0
+        return math.sqrt(max(self.K - b, 0) / (self.K - 1))
+
+
+def _sel(arr: np.ndarray, feature: int | None) -> np.ndarray:
+    return arr if feature is None else arr[..., feature]
+
+
+class _MomentAgg:
+    """mean / var / sum / count.
+
+    Under the uniform policy the point estimate is the exact Chan fold over
+    the blocks read, with Student-t CLT intervals across per-block
+    estimates.  Under non-uniform policies every draw contributes
+    Hansen-Hurwitz expansions of the corpus totals ``(count, sum, sum x^2)``
+    -- ``w_k * t_k`` with ``w_k = 1/p_k`` (or ``K`` for the marginally
+    uniform stratified single-draw stream) -- and the point estimates are
+    the HT/Hajek forms built from them (mirroring
+    ``combine_summaries(weights=...)``), so selection bias divides back out
+    for mean, var, and sum alike.  Grouped variants keep one fold and one
+    sample list per class; grouped means use the Hajek ratio (class counts
+    are unknown), with approximate intervals over per-block class means."""
+
+    def __init__(self, agg: Aggregate, ctx: _Ctx):
+        self.agg = agg
+        self.ctx = ctx
+        self.groups = ctx.num_classes if agg.by_label else 1
+        self.acc: list[BlockSketch | None] = [None] * self.groups
+        self.samples: list[list[np.ndarray]] = [[] for _ in range(self.groups)]
+        # per-draw HH expansions (count_hat, sum_hat, sumsq_hat), non-uniform
+        self.ht: list[list[tuple]] = [[] for _ in range(self.groups)]
+
+    def update(self, sketches: Sequence[BlockSketch], weight: float | None) -> None:
+        from repro.kernels.block_sketch import merge_sketches
+
+        for g, sk in enumerate(sketches):
+            kind = self.agg.kind
+            if sk.count > 0:
+                self.acc[g] = sk if self.acc[g] is None else merge_sketches(self.acc[g], sk)
+            scale = weight if weight is not None else float(self.ctx.K)
+            if not self.ctx.uniform:
+                self.ht[g].append(
+                    (
+                        scale * sk.count,
+                        scale * sk.sum,
+                        scale * (sk.m2 + sk.count * sk.mean**2),
+                    )
+                )
+            if kind == "mean":
+                if sk.count > 0:
+                    if weight is not None and not self.agg.by_label:
+                        # Hansen-Hurwitz: per-draw corpus-sum expansion over N
+                        e = weight * sk.sum / max(self.ctx.N, 1)
+                    else:
+                        e = sk.mean  # per-block mean (i.i.d. under uniform)
+                    self.samples[g].append(np.asarray(e, dtype=np.float64))
+            elif kind == "var":
+                if self.ctx.uniform and sk.count > 1:
+                    self.samples[g].append(np.asarray(sk.variance, dtype=np.float64))
+            elif kind == "sum":
+                self.samples[g].append(np.asarray(scale * sk.sum, dtype=np.float64))
+            elif kind == "count":
+                self.samples[g].append(np.asarray(scale * sk.count, dtype=np.float64))
+
+    def _ht_totals(self, g: int):
+        """Averaged HH expansions -> (count_hat, sum_hat, sumsq_hat)."""
+        counts, sums, sumsqs = zip(*self.ht[g])
+        return (
+            float(np.mean(counts)),
+            np.mean(sums, axis=0),
+            np.mean(sumsqs, axis=0),
+        )
+
+    def _ht_var(self, g: int) -> tuple[np.ndarray, list[np.ndarray]] | None:
+        """(point, per-draw plug-in samples) for var under non-uniform
+        selection: ``(E_hat[sum x^2] - n * mu^2) / (n - 1)`` with the known
+        corpus ``N`` (ungrouped) or the HT class count (grouped)."""
+        if not self.ht[g]:
+            return None
+        c_hat, sum_hat, ss_hat = self._ht_totals(g)
+        n = float(self.ctx.N) if not self.agg.by_label else c_hat
+        if n <= 1:
+            return None
+        mu = sum_hat / n
+        denom = n - 1.0
+        point = np.maximum(ss_hat - n * mu**2, 0.0) / denom
+        draws = [
+            np.maximum(ss_i - n * mu**2, 0.0) / denom for (_, _, ss_i) in self.ht[g]
+        ]
+        return point, draws
+
+    def _point(self, g: int) -> np.ndarray | None:
+        acc, kind, ctx = self.acc[g], self.agg.kind, self.ctx
+        samples = self.samples[g]
+        if kind in ("sum", "count"):
+            if not samples:
+                return None
+            return np.mean(samples, axis=0)
+        if acc is None:
+            return None
+        if kind == "mean":
+            if not ctx.uniform:
+                if self.agg.by_label:
+                    # Hajek ratio: HT class sum over HT class count
+                    c_hat, sum_hat, _ = self._ht_totals(g)
+                    return sum_hat / max(c_hat, _EPS) if c_hat > 0 else None
+                return np.mean(samples, axis=0)
+            return acc.mean
+        if not ctx.uniform:  # var under PPS: HT-expanded, not the raw fold
+            ht = self._ht_var(g)
+            return None if ht is None else ht[0]
+        return acc.variance  # var, uniform: exact fold over blocks read
+
+    def _ci_samples(self, g: int) -> list[np.ndarray]:
+        if self.agg.kind == "var" and not self.ctx.uniform:
+            ht = self._ht_var(g)
+            return [] if ht is None else ht[1]
+        return self.samples[g]
+
+    def result(self) -> AggregateResult:
+        ests, los, his, rels = [], [], [], []
+        for g in range(self.groups):
+            pt = self._point(g)
+            samples = self._ci_samples(g)
+            b = len(samples)
+            if pt is None:
+                ests.append(None)
+                los.append(None)
+                his.append(None)
+                continue
+            sl = self.agg.feature if self.agg.kind != "count" else None
+            pt = _sel(np.asarray(pt, dtype=np.float64), sl)
+            if b >= 2:
+                arr = np.stack(samples)
+                se = _sel(arr, sl).std(axis=0, ddof=1) / math.sqrt(b)
+                half = self.ctx.t_half(b) * self.ctx.fpc(b) * se
+            else:
+                half = np.full(np.shape(pt), np.inf)
+            ests.append(pt)
+            los.append(pt - half)
+            his.append(pt + half)
+            rels.append(float(np.max(half / np.maximum(np.abs(pt), _EPS))))
+        est, lo, hi = (_stack_groups(v, self.agg.by_label) for v in (ests, los, his))
+        rel = max(rels) if rels and len(rels) == self.groups else math.inf
+        return AggregateResult(self.agg.label, self.agg.kind, est, lo, hi, rel)
+
+
+class _HistAgg:
+    """quantile / histogram: mergeable fixed-grid histograms per block, with
+    bootstrap-over-block-histograms intervals for quantiles."""
+
+    def __init__(self, agg: Aggregate, ctx: _Ctx, lo: np.ndarray, hi: np.ndarray):
+        self.agg = agg
+        self.ctx = ctx
+        self.lo = lo
+        self.hi = hi
+        self.groups = ctx.num_classes if agg.by_label else 1
+        self.hists: list[list[np.ndarray]] = [[] for _ in range(self.groups)]
+        self.weights: list[float] = []
+
+    def update(self, sketches: Sequence[BlockSketch], weight: float | None) -> None:
+        for g, sk in enumerate(sketches):
+            self.hists[g].append(sk.hist.astype(np.float64))
+        self.weights.append(weight if weight is not None else float(self.ctx.K))
+
+    def _weighted(self, g: int) -> np.ndarray:
+        """Per-block histograms HT-expanded by their draw weights [b, F, bins]
+        (uniform policy: constant K, so quantiles are unaffected)."""
+        w = np.asarray(self.weights)[:, None, None]
+        return w * np.stack(self.hists[g])
+
+    def _merged(self, g: int) -> np.ndarray:
+        """HT estimate of the corpus histogram (counts scaled to N)."""
+        return self._weighted(g).sum(axis=0) / len(self.weights)
+
+    def _quantile(self, merged: np.ndarray) -> np.ndarray:
+        q = quantile_from_histogram(merged, [self.agg.q], lo=self.lo, hi=self.hi)[:, 0]
+        return _sel(q, self.agg.feature)
+
+    def result(self) -> AggregateResult:
+        if self.agg.kind == "histogram":
+            f = self.agg.feature
+            ests = [
+                m if f is None else m[f]
+                for m in (self._merged(g) for g in range(self.groups))
+            ]
+            est = _stack_groups(ests, self.agg.by_label)
+            return AggregateResult(self.agg.label, "histogram", est, None, None, None)
+        ests, los, his, rels = [], [], [], []
+        alpha = 1.0 - self.ctx.confidence
+        for g in range(self.groups):
+            b = len(self.hists[g])
+            merged = self._merged(g)
+            if merged.sum() <= 0:
+                ests.append(None)
+                los.append(None)
+                his.append(None)
+                continue
+            pt = self._quantile(merged)
+            if b >= 2:
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([self.ctx.seed, 0xB0075, g, b])
+                )
+                stacked = self._weighted(g)              # [b, F, bins] HT-scaled
+                idx = rng.integers(0, b, size=(self.ctx.bootstrap, b))
+                boots = stacked[idx].sum(axis=1)         # [B, F, bins]
+                B, F, nbins = boots.shape
+                qs = quantile_from_histogram(
+                    boots.reshape(B * F, nbins),
+                    [self.agg.q],
+                    lo=np.tile(self.lo, B),
+                    hi=np.tile(self.hi, B),
+                )[:, 0].reshape(B, F)
+                qs = _sel(qs, self.agg.feature)
+                lo = np.quantile(qs, alpha / 2, axis=0)
+                hi = np.quantile(qs, 1 - alpha / 2, axis=0)
+            else:
+                lo = np.full(np.shape(pt), -np.inf)
+                hi = np.full(np.shape(pt), np.inf)
+            half = (np.asarray(hi) - np.asarray(lo)) / 2.0
+            ests.append(pt)
+            los.append(lo)
+            his.append(hi)
+            rels.append(float(np.max(half / np.maximum(np.abs(pt), _EPS))))
+        est, lo, hi = (_stack_groups(v, self.agg.by_label) for v in (ests, los, his))
+        rel = max(rels) if rels and len(rels) == self.groups else math.inf
+        return AggregateResult(self.agg.label, "quantile", est, lo, hi, rel)
+
+
+def _stack_groups(values: list, by_label: bool):
+    """Stack per-class results into a leading class axis (NaN for classes
+    not yet observed); scalar-ize ungrouped single-element results."""
+    shaped = [np.asarray(v, dtype=np.float64) for v in values if v is not None]
+    if not shaped:
+        return math.nan if not by_label else np.full(len(values), np.nan)
+    proto = np.full(shaped[0].shape, np.nan)
+    filled = [np.asarray(v, np.float64) if v is not None else proto for v in values]
+    if not by_label:
+        out = filled[0]
+        return float(out.reshape(-1)[0]) if out.shape in ((), (1,)) else out
+    return np.stack(filled)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class QueryExecutor:
+    """Runs one :class:`Query` against an ``RSPDataset``-like object (needs
+    ``spec``, ``num_blocks``, ``executor``, ``policy()``, ``summaries`` /
+    ``has_summaries``, and ``num_classes`` / ``label_column`` for grouped
+    aggregates)."""
+
+    def __init__(self, dataset, query: Query):
+        self.ds = dataset
+        self.q = query
+        if any(a.by_label for a in query.aggregates) and dataset.num_classes is None:
+            raise ValueError("by_label aggregates need num_classes on the dataset")
+
+    # -- sketch fast path --------------------------------------------------
+    def _sketch_eligible(self) -> bool:
+        for a in self.q.aggregates:
+            if a.kind not in _SKETCH_ONLY_KINDS:
+                return False
+            if a.by_label and a.kind != "count":
+                return False
+        return True
+
+    def _answer_from_sketches(self) -> QueryResult:
+        from repro.rsp.summaries import combine_summaries
+
+        # forcing this path on a sketch-less dataset computes the sketches
+        # (a full-corpus pass through the executor) -- meter it honestly
+        executor = self.ds.executor
+        stats0 = executor.stats()
+        summaries = self.ds.summaries
+        stats = combine_summaries(summaries)
+        out = []
+        for a in self.q.aggregates:
+            if a.kind == "count" and a.by_label:
+                hists = [s.label_hist for s in summaries]
+                if any(h is None for h in hists):
+                    raise ValueError("grouped count needs label histograms in the sketches")
+                est = np.sum(hists, axis=0).astype(np.float64)
+            elif a.kind == "count":
+                est = float(stats.count)
+            elif a.kind == "mean":
+                est = _sel(stats.mean, a.feature)
+            elif a.kind == "var":
+                est = _sel(stats.variance, a.feature)
+            else:  # sum
+                est = _sel(stats.count * stats.mean, a.feature)
+            est = float(est) if np.ndim(est) == 0 else np.asarray(est)
+            # all K sketches combined == the exact corpus statistic
+            out.append(AggregateResult(a.label, a.kind, est, est, est, 0.0))
+        return QueryResult(
+            aggregates=tuple(out),
+            blocks_read=0,
+            total_blocks=self.ds.num_blocks,
+            confidence=self.q.confidence,
+            target_rel_err=self.q.target_rel_err,
+            converged=True,
+            from_sketches=True,
+            executor_stats=executor.stats() - stats0,
+        )
+
+    # -- progressive path --------------------------------------------------
+    def _grid(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-feature histogram grid from the partition-time sketches'
+        global extrema (the only pre-read range information there is)."""
+        summaries = self.ds.summaries
+        lo = np.min([s.min for s in summaries], axis=0).astype(np.float64)
+        hi = np.max([s.max for s in summaries], axis=0).astype(np.float64)
+        pad = np.maximum(1e-9, 1e-9 * (hi - lo))
+        return lo - pad, hi + pad
+
+    def _make_states(self, needs_hist: bool):
+        ctx = _Ctx(
+            K=self.ds.num_blocks,
+            N=self.ds.spec.num_records,
+            confidence=self.q.confidence,
+            uniform=isinstance(self._pol, UniformPolicy),
+            num_classes=self.ds.num_classes,
+            bootstrap=self.q.bootstrap,
+            seed=self.q.seed,
+        )
+        lo = hi = None
+        if needs_hist:
+            lo, hi = self._grid()
+        states = []
+        for a in self.q.aggregates:
+            if a.kind in ("quantile", "histogram"):
+                states.append(_HistAgg(a, ctx, lo, hi))
+            else:
+                states.append(_MomentAgg(a, ctx))
+        return states, lo, hi
+
+    def _block_sketches(self, block, lo, hi, needs_hist, grouped, need_whole) -> dict:
+        """One fused pass over the block; per-class sub-sketches on demand.
+        ``need_whole=False`` (every aggregate grouped) skips the dead
+        whole-block pass."""
+        from repro.kernels.block_sketch import block_sketch_ref
+
+        bins = self.q.bins if needs_hist else 0
+        kw = dict(bins=bins) if not needs_hist else dict(bins=bins, lo=lo, hi=hi)
+        impl = self.q.sketch_impl
+        if bins == 0 and impl == "pallas":
+            impl = "jax"  # the kernel always histograms; moments-only goes jit
+        whole = block_sketch(block, impl=impl, **kw) if need_whole else None
+        per_class = None
+        if grouped:
+            x = np.asarray(block).reshape(np.shape(block)[0], -1)
+            labels = x[:, self.ds.label_column % x.shape[1]].astype(np.int64)
+            per_class = []
+            for c in range(self.ds.num_classes):
+                rows = x[labels == c]
+                if rows.shape[0] == 0:
+                    f = x.shape[1]
+                    per_class.append(
+                        BlockSketch(
+                            count=0.0,
+                            mean=np.zeros(f),
+                            m2=np.zeros(f),
+                            min=np.full(f, np.inf),
+                            max=np.full(f, -np.inf),
+                            hist=np.zeros((f, bins), np.int64) if needs_hist else None,
+                        )
+                    )
+                else:
+                    per_class.append(block_sketch_ref(rows, **kw))
+        return {"whole": whole, "per_class": per_class}
+
+    def stream(self) -> Iterator[QueryResult]:
+        """One anytime :class:`QueryResult` per block read."""
+        return self._stream(anytime=True)
+
+    def _stream(self, *, anytime: bool) -> Iterator[QueryResult]:
+        q = self.q
+        if q.use_sketches is True or (
+            q.use_sketches == "auto" and self._sketch_eligible() and self.ds.has_summaries
+        ):
+            if not self._sketch_eligible():
+                raise ValueError(
+                    "use_sketches=True but the query needs block data"
+                    " (quantile/histogram or grouped non-count aggregates)"
+                )
+            yield self._answer_from_sketches()
+            return
+
+        executor = self.ds.executor
+        # snapshot BEFORE resolving the policy or building states: sketch
+        # probabilities (weighted/stratified) and the histogram grid both
+        # come from ds.summaries, which on a sketch-less dataset reads every
+        # block -- those passes belong in the query's honest I/O count
+        stats0 = executor.stats()
+        self._pol = self.ds.policy(q.policy, seed=q.seed)
+        uniform = isinstance(self._pol, UniformPolicy)
+        K = self.ds.num_blocks
+        max_blocks = q.max_blocks if q.max_blocks is not None else K
+        if uniform:
+            max_blocks = min(max_blocks, K)
+        if max_blocks < 1:
+            raise ValueError("max_blocks must be >= 1")
+        needs_hist = any(a.kind in ("quantile", "histogram") for a in q.aggregates)
+        grouped = any(a.by_label for a in q.aggregates)
+        need_whole = any(not a.by_label for a in q.aggregates)
+        states, lo, hi = self._make_states(needs_hist)
+
+        def gen_ids():
+            for _ in range(max_blocks):
+                yield self._pol.sample(1)[0]
+
+        b = 0
+        for bid, block in executor.map_blocks(None, gen_ids(), with_ids=True):
+            weight = None
+            if isinstance(self._pol, WeightedPolicy):
+                weight = float(self._pol.weights([bid])[0])
+            sk = self._block_sketches(block, lo, hi, needs_hist, grouped, need_whole)
+            for agg, state in zip(q.aggregates, states):
+                state.update(sk["per_class"] if agg.by_label else [sk["whole"]], weight)
+            b += 1
+            # materializing results is not free (quantile CIs bootstrap over
+            # all b histograms); when nothing can stop the scan early and the
+            # caller only wants the final answer, skip the intermediate ones
+            must_emit = anytime or q.target_rel_err is not None or b == max_blocks
+            if not must_emit:
+                continue
+            results = tuple(s.result() for s in states)
+            errs = [r.rel_err for r in results if r.rel_err is not None]
+            converged = (
+                q.target_rel_err is not None
+                and b >= q.min_blocks
+                and bool(errs)
+                and max(errs) <= q.target_rel_err
+            )
+            yield QueryResult(
+                aggregates=results,
+                blocks_read=b,
+                total_blocks=K,
+                confidence=q.confidence,
+                target_rel_err=q.target_rel_err,
+                converged=converged,
+                from_sketches=False,
+                executor_stats=executor.stats() - stats0,
+            )
+            if converged:
+                return
+
+    def run(self) -> QueryResult:
+        result = None
+        for result in self._stream(anytime=False):
+            pass
+        assert result is not None  # max_blocks >= 1 guarantees one emission
+        return result

@@ -90,10 +90,16 @@ def summarize_block(
     num_classes: int | None = None,
 ) -> BlockSummary:
     """Compute one block's sketch.  ``label_column`` (with ``num_classes``)
-    additionally records the label histogram of that column."""
+    additionally records the label histogram of that column.
+
+    Moments/extrema come from the fused one-pass block sketch
+    (``repro.kernels.block_sketch``) -- the same primitive the query layer
+    folds at read time, so partition- and query-time sketching share one
+    single-pass implementation."""
+    from repro.kernels.block_sketch import block_sketch_ref
+
     x = np.asarray(block, dtype=np.float64).reshape(block.shape[0], -1)
-    mean = x.mean(axis=0)
-    m2 = ((x - mean) ** 2).sum(axis=0)
+    sk = block_sketch_ref(x)
     hist = None
     if label_column is not None and num_classes is not None:
         labels = x[:, label_column]
@@ -110,11 +116,11 @@ def summarize_block(
         hist = np.bincount(ilabels, minlength=num_classes)
     return BlockSummary(
         block_id=block_id,
-        count=int(x.shape[0]),
-        mean=mean,
-        m2=m2,
-        min=x.min(axis=0),
-        max=x.max(axis=0),
+        count=int(sk.count),
+        mean=sk.mean,
+        m2=sk.m2,
+        min=sk.min,
+        max=sk.max,
         label_hist=hist,
     )
 

@@ -394,3 +394,59 @@ def test_similarity_detects_outlier_block(tmp_path):
     sane = got2.similarity(1, metric="mmd", seed=0)
     outlier = got2.similarity(5, metric="mmd", seed=0)
     assert outlier > sane + 0.1
+
+
+# ---------------------------------------------------------------------------
+# Cache / prefetch instrumentation (ExecutorStats)
+# ---------------------------------------------------------------------------
+
+def test_stats_hits_misses_evictions():
+    blocks = _blocks(k=6)
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=0, cache_blocks=2) as ex:
+        assert ex.stats() == rsp.ExecutorStats()
+        ex.fetch(0)          # miss
+        ex.fetch(0)          # hit
+        ex.fetch(1)          # miss (cache {0, 1})
+        ex.fetch(2)          # miss -> evicts 0
+        ex.fetch(0)          # miss -> evicts 1
+        s = ex.stats()
+    assert (s.hits, s.misses, s.evictions) == (1, 4, 2)
+    assert s.blocks_fetched == 4
+
+
+def test_stats_cache_disabled_counts_every_fetch_as_miss():
+    blocks = _blocks(k=4)
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=0, cache_blocks=0) as ex:
+        for _ in range(3):
+            ex.fetch(1)
+        s = ex.stats()
+    assert (s.hits, s.misses, s.evictions) == (0, 3, 0)
+
+
+def test_stats_snapshot_subtraction_meters_a_window():
+    blocks = _blocks(k=5)
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=0, cache_blocks=8) as ex:
+        ex.fetch(0)
+        before = ex.stats()
+        ex.fetch(0)  # hit
+        ex.fetch(1)  # miss
+        window = ex.stats() - before
+    assert (window.hits, window.misses) == (1, 1)
+    assert window.blocks_fetched == 1
+
+
+def test_stats_under_prefetch_pipeline():
+    blocks = _blocks(k=8)
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=3, cache_blocks=8) as ex:
+        list(ex.map_blocks(None, [0, 1, 2, 3, 0, 1]))
+        s = ex.stats()
+    assert s.hits + s.misses == 6
+    assert s.misses >= 4  # at least the four distinct blocks were fetched
+
+
+def test_reset_stats():
+    blocks = _blocks(k=3)
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=0) as ex:
+        ex.fetch(0)
+        ex.reset_stats()
+        assert ex.stats() == rsp.ExecutorStats()

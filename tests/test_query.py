@@ -1,0 +1,403 @@
+"""Progressive query subsystem: sketch fast path (zero block reads), anytime
+CI calibration across blocks, early stopping at target_rel_err, grouped
+aggregates, and the bootstrap quantile intervals."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip below; the rest of the module runs
+    HAVE_HYPOTHESIS = False
+
+from repro import rsp
+from repro.rsp.query import (
+    Aggregate,
+    Query,
+    as_query,
+    norm_ppf,
+    parse_aggregate,
+    t_ppf,
+)
+
+
+@pytest.fixture(scope="module")
+def labelled_ds():
+    rng = np.random.default_rng(0)
+    n, k = 24000, 40
+    x = rng.normal(1.5, 2.0, size=(n, 3)).astype(np.float32)
+    y = rng.integers(0, 2, size=(n, 1)).astype(np.float32)
+    data = np.concatenate([x, y], axis=1)
+    return rsp.partition(data, blocks=k, seed=7, num_classes=2), data
+
+
+@pytest.fixture(scope="module")
+def plain_ds():
+    rng = np.random.default_rng(42)
+    data = rng.normal(1.5, 2.0, size=(20000, 3)).astype(np.float32)
+    return rsp.partition(data, blocks=50, seed=3), data
+
+
+# ---------------------------------------------------------------------------
+# Declaration / parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_aggregates():
+    assert parse_aggregate("mean").kind == "mean"
+    assert parse_aggregate("median").q == 0.5
+    assert parse_aggregate("p95").q == 0.95
+    assert parse_aggregate("p99.9").q == pytest.approx(0.999)
+    assert parse_aggregate(Aggregate("var")).kind == "var"
+    with pytest.raises(ValueError):
+        parse_aggregate("p101x")
+    with pytest.raises(ValueError):
+        Aggregate("quantile")  # missing q
+    with pytest.raises(ValueError):
+        Aggregate("mean", q=0.5)  # q on a non-quantile
+    with pytest.raises(ValueError):
+        Aggregate("wat")
+
+
+def test_as_query_validation():
+    q = as_query(["mean", "p95"], target_rel_err=0.01)
+    assert len(q.aggregates) == 2 and q.aggregates[1].q == 0.95
+    with pytest.raises(ValueError):
+        as_query("mean", target_rel_err=-1.0)
+    with pytest.raises(ValueError):
+        as_query("mean", min_blocks=1)
+    with pytest.raises(ValueError):
+        as_query(Query(aggregates=(Aggregate("mean"),)), max_blocks=5)
+
+
+def test_t_and_norm_quantiles():
+    # exact low-df values and monotone approach to the normal quantile
+    assert t_ppf(0.975, 1) == pytest.approx(12.7062, rel=1e-4)
+    assert t_ppf(0.975, 2) == pytest.approx(4.30265, rel=1e-4)
+    assert t_ppf(0.975, 9) == pytest.approx(2.26216, rel=5e-3)
+    assert t_ppf(0.975, 200) == pytest.approx(1.97190, rel=1e-3)  # scipy value
+    assert t_ppf(0.975, 10_000) == pytest.approx(norm_ppf(0.975), rel=1e-3)
+    assert norm_ppf(0.975) == pytest.approx(1.95996, rel=1e-5)
+    assert norm_ppf(0.5) == pytest.approx(0.0, abs=1e-12)
+    scipy_stats = pytest.importorskip("scipy.stats")
+    for df in (3, 5, 12, 40):
+        assert t_ppf(0.975, df) == pytest.approx(scipy_stats.t.ppf(0.975, df), rel=1.5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Sketch fast path: zero block reads
+# ---------------------------------------------------------------------------
+
+def test_sketch_only_query_reads_zero_blocks(labelled_ds):
+    ds, data = labelled_ds
+    res = ds.query(["mean", "var", "sum", "count"])
+    assert res.from_sketches and res.converged
+    assert res.blocks_read == 0
+    assert res.executor_stats.blocks_fetched == 0
+    full = data.astype(np.float64)
+    np.testing.assert_allclose(res["mean"].estimate, full.mean(0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(res["var"].estimate, full.var(0, ddof=1), rtol=1e-4)
+    np.testing.assert_allclose(res["sum"].estimate, full.sum(0), rtol=1e-5)
+    assert res["count"].estimate == data.shape[0]
+    assert res.max_rel_err == 0.0  # exact: all K sketches combined
+
+
+def test_sketch_only_grouped_count(labelled_ds):
+    ds, data = labelled_ds
+    res = ds.query(Aggregate("count", by_label=True))
+    assert res.from_sketches and res.blocks_read == 0
+    truth = np.bincount(data[:, -1].astype(np.int64), minlength=2)
+    np.testing.assert_allclose(res["count/label"].estimate, truth)
+
+
+def test_quantile_never_sketch_only(labelled_ds):
+    ds, _ = labelled_ds
+    res = ds.query("median", max_blocks=5)
+    assert not res.from_sketches and res.blocks_read > 0
+    with pytest.raises(ValueError):
+        ds.query("median", use_sketches=True, max_blocks=5)
+
+
+def test_use_sketches_false_streams(labelled_ds):
+    ds, data = labelled_ds
+    res = ds.query("mean", use_sketches=False, max_blocks=6)
+    assert not res.from_sketches
+    assert res.blocks_read == 6
+    assert res.executor_stats.hits + res.executor_stats.misses >= 6
+
+
+# ---------------------------------------------------------------------------
+# CI calibration and early stopping (the paper's "few blocks" loop)
+# ---------------------------------------------------------------------------
+
+def test_mean_ci_coverage(plain_ds):
+    """A 95% CI from g=10 of K=50 blocks must cover the corpus mean in >=90%
+    of seeded trials (nominal coverage ~95%; the margin absorbs noise)."""
+    ds, data = plain_ds
+    truth = data.astype(np.float64).mean(0)[0]
+    trials, covered = 80, 0
+    for s in range(trials):
+        res = ds.query("mean", max_blocks=10, use_sketches=False, seed=s)
+        a = res["mean"]
+        assert res.blocks_read == 10
+        covered += bool(a.ci_lo[0] <= truth <= a.ci_hi[0])
+    assert covered / trials >= 0.90, f"coverage {covered}/{trials}"
+
+
+def test_target_rel_err_stops_early_and_respects_max_blocks(plain_ds):
+    ds, _ = plain_ds
+    # generous target -> stops well before max_blocks
+    res = ds.query("mean", target_rel_err=0.05, max_blocks=40, use_sketches=False)
+    assert res.converged
+    assert 2 <= res.blocks_read < 40
+    # impossible target -> reads exactly max_blocks, not more, not converged
+    res = ds.query("mean", target_rel_err=1e-7, max_blocks=12, use_sketches=False)
+    assert not res.converged
+    assert res.blocks_read == 12
+
+
+def test_stream_emits_anytime_results_with_narrowing_ci(plain_ds):
+    ds, _ = plain_ds
+    widths, reads = [], []
+    for res in ds.query_stream("mean", max_blocks=15, use_sketches=False, seed=1):
+        a = res["mean"]
+        assert np.all(a.ci_lo <= a.estimate) and np.all(a.estimate <= a.ci_hi)
+        widths.append(float(np.max(a.ci_hi - a.ci_lo)))
+        reads.append(res.blocks_read)
+    assert reads == list(range(1, 16))
+    assert widths[0] == np.inf  # one block: no spread estimate yet
+    assert widths[-1] < widths[1]  # intervals narrow as blocks accumulate
+
+
+def test_executor_stats_meter_the_query(plain_ds):
+    ds, _ = plain_ds
+    res = ds.query("mean", max_blocks=8, use_sketches=False, seed=2)
+    stats = res.executor_stats
+    assert stats.hits + stats.misses >= res.blocks_read
+    # a second identical query hits the LRU cache for the overlapping blocks
+    res2 = ds.query("mean", max_blocks=8, use_sketches=False, seed=2)
+    assert res2.executor_stats.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Quantiles: merged histograms + bootstrap intervals
+# ---------------------------------------------------------------------------
+
+def test_quantile_estimate_and_ci(plain_ds):
+    ds, data = plain_ds
+    full = data.astype(np.float64)
+    res = ds.query(["median", "p95"], max_blocks=20, use_sketches=False, seed=3)
+    med, p95 = res["p50"], res["p95"]
+    np.testing.assert_allclose(med.estimate, np.median(full, axis=0), atol=0.06)
+    np.testing.assert_allclose(p95.estimate, np.quantile(full, 0.95, axis=0), atol=0.12)
+    assert np.all(med.ci_lo <= med.estimate) and np.all(med.estimate <= med.ci_hi)
+    # bootstrap CI should cover the corpus median here
+    truth = np.median(full, axis=0)
+    assert np.all(med.ci_lo <= truth) and np.all(truth <= med.ci_hi)
+
+
+def test_quantile_stops_early_at_loose_target(plain_ds):
+    ds, _ = plain_ds
+    res = ds.query("median", target_rel_err=0.05, max_blocks=40, use_sketches=False)
+    assert res.converged and res.blocks_read < 40
+
+
+def test_histogram_aggregate_scales_to_corpus(plain_ds):
+    ds, data = plain_ds
+    res = ds.query("histogram", max_blocks=10, use_sketches=False, bins=32)
+    h = res["histogram"]
+    assert h.rel_err is None and h.ci_lo is None
+    est = np.asarray(h.estimate)
+    assert est.shape == (3, 32)
+    # total scaled mass ~ corpus record count per feature
+    np.testing.assert_allclose(est.sum(axis=1), data.shape[0], rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Grouped aggregates
+# ---------------------------------------------------------------------------
+
+def test_grouped_mean_and_quantile(labelled_ds):
+    ds, data = labelled_ds
+    full = data.astype(np.float64)
+    labels = full[:, -1].astype(np.int64)
+    res = ds.query(
+        [
+            Aggregate("mean", feature=0, by_label=True),
+            Aggregate("quantile", q=0.95, feature=0, by_label=True),
+        ],
+        max_blocks=25,
+        use_sketches=False,
+        seed=5,
+    )
+    gm = res["mean[0]/label"]
+    gq = res["p95[0]/label"]
+    assert gm.estimate.shape == (2,) and gq.estimate.shape == (2,)
+    for c in (0, 1):
+        cls = full[labels == c, 0]
+        assert abs(gm.estimate[c] - cls.mean()) < 0.1
+        assert abs(gq.estimate[c] - np.quantile(cls, 0.95)) < 0.25
+        assert gm.ci_lo[c] <= gm.estimate[c] <= gm.ci_hi[c]
+
+
+def test_histogram_feature_selection(plain_ds):
+    ds, _ = plain_ds
+    res = ds.query(
+        Aggregate("histogram", feature=0), max_blocks=4, bins=8, use_sketches=False
+    )
+    assert np.asarray(res["histogram[0]"].estimate).shape == (8,)
+
+
+def test_grouped_count_shape_matches_sketch_path(labelled_ds):
+    """Streamed and sketch-answered grouped counts must agree in shape [C]."""
+    ds, _ = labelled_ds
+    a = ds.query(Aggregate("count", by_label=True))
+    b = ds.query(Aggregate("count", by_label=True), use_sketches=False, max_blocks=4)
+    assert a["count/label"].estimate.shape == (2,)
+    assert b["count/label"].estimate.shape == (2,)
+
+
+def test_forced_sketch_path_meters_summary_computation():
+    """use_sketches=True on a sketch-less dataset computes the sketches via a
+    full-corpus pass; the result's executor_stats must show it."""
+    rng = np.random.default_rng(2)
+    data = rng.normal(5, 1, size=(6400, 3)).astype(np.float32)
+    ds = rsp.partition(data, blocks=16, seed=1, summaries=False)
+    res = ds.query("mean", use_sketches=True)
+    assert res.from_sketches
+    assert res.executor_stats.blocks_fetched >= 16
+
+
+def test_weighted_policy_summary_scan_is_metered():
+    """Building weighted-policy probabilities on a sketch-less dataset reads
+    every block; that pass belongs in the query's I/O count."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(5, 1, size=(6400, 3)).astype(np.float32)
+    ds = rsp.partition(data, blocks=16, seed=1, summaries=False)
+    res = ds.query("median", policy="weighted", max_blocks=3, use_sketches=False)
+    assert res.executor_stats.blocks_fetched >= 16
+
+
+def test_grouped_requires_num_classes(plain_ds):
+    ds, _ = plain_ds
+    with pytest.raises(ValueError, match="num_classes"):
+        ds.query(Aggregate("mean", by_label=True), max_blocks=4)
+
+
+# ---------------------------------------------------------------------------
+# Policies and storage round-trip
+# ---------------------------------------------------------------------------
+
+def test_weighted_policy_query(plain_ds):
+    ds, data = plain_ds
+    res = ds.query(
+        "mean", policy="weighted", max_blocks=25, use_sketches=False, seed=4
+    )
+    truth = data.astype(np.float64).mean(0)
+    assert np.abs(res["mean"].estimate - truth).max() < 0.25
+    assert np.all(res["mean"].ci_lo <= res["mean"].estimate)
+
+
+def test_weighted_policy_quantile_is_ht_weighted(plain_ds):
+    """Under PPS selection the merged histogram must be HT-expanded; the
+    resulting quantile stays close to the truth."""
+    ds, data = plain_ds
+    res = ds.query("median", policy="weighted", max_blocks=25, use_sketches=False, seed=6)
+    truth = np.median(data.astype(np.float64), axis=0)
+    assert np.abs(res["p50"].estimate - truth).max() < 0.2
+
+
+def test_weighted_policy_var_is_ht_unbiased():
+    """Variance under PPS selection must divide the selection bias back out
+    (HT expansion of the corpus sum of squares); the raw fold over the
+    oversampled high-dispersion blocks is several times too large."""
+    rng = np.random.default_rng(0)
+    skewed = np.sort(rng.lognormal(mean=1.0, sigma=1.2, size=64 * 512))
+    chunked = rsp.RSPDataset(
+        rsp.RSPSpec(num_records=64 * 512, num_blocks=64, num_original_blocks=1,
+                    record_shape=(1,)),
+        blocks=skewed.reshape(64, 512, 1).astype(np.float32),
+    )
+    truth = skewed.var(ddof=1)
+    ests = [
+        float(np.asarray(
+            chunked.query("var", policy="weighted", max_blocks=8,
+                          use_sketches=False, seed=s)["var"].estimate
+        ))
+        for s in range(20)
+    ]
+    ratio = np.mean(ests) / truth
+    assert 0.5 < ratio < 1.7, f"HT var off by {ratio:.2f}x"
+
+
+def test_summaryless_quantile_query_reports_grid_scan_io():
+    """Deriving the histogram grid on a sketch-less dataset reads blocks;
+    that pass must show up in the query's executor_stats."""
+    rng = np.random.default_rng(1)
+    data = rng.normal(5, 1, size=(8000, 4)).astype(np.float32)
+    ds = rsp.partition(data, blocks=20, seed=1, summaries=False)
+    res = ds.query("median", max_blocks=3)
+    assert res.blocks_read == 3
+    assert res.executor_stats.blocks_fetched >= 20  # grid scan counted
+
+
+def test_run_without_target_matches_final_stream_result(plain_ds):
+    """run() skips intermediate result materialization when no stopping rule
+    can fire -- but the final answer must equal the anytime stream's last."""
+    ds, _ = plain_ds
+    final = ds.query("median", max_blocks=8, use_sketches=False, seed=9)
+    last = list(ds.query_stream("median", max_blocks=8, use_sketches=False, seed=9))[-1]
+    assert final.blocks_read == last.blocks_read == 8
+    np.testing.assert_allclose(final["p50"].estimate, last["p50"].estimate)
+    np.testing.assert_allclose(final["p50"].ci_lo, last["p50"].ci_lo)
+
+
+def test_query_on_stored_dataset(tmp_path, labelled_ds):
+    ds, data = labelled_ds
+    ds.save(str(tmp_path / "q.rsp"))
+    opened = rsp.open(str(tmp_path / "q.rsp"))
+    # sketches come from the manifest: still zero block reads
+    res = opened.query("mean")
+    assert res.from_sketches and res.executor_stats.blocks_fetched == 0
+    np.testing.assert_allclose(
+        res["mean"].estimate, data.astype(np.float64).mean(0), rtol=1e-5, atol=1e-5
+    )
+    # a quantile query actually fetches from the store
+    res = opened.query("median", max_blocks=5, use_sketches=False)
+    assert res.executor_stats.blocks_fetched > 0
+
+
+# ---------------------------------------------------------------------------
+# Property test (guarded like the others)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        max_blocks=st.integers(2, 20),
+        target=st.one_of(st.none(), st.floats(1e-4, 0.5)),
+        seed=st.integers(0, 1000),
+    )
+    def test_query_invariants(max_blocks, target, seed):
+        rng = np.random.default_rng(11)
+        data = rng.normal(3.0, 1.0, size=(4000, 2)).astype(np.float32)
+        ds = rsp.partition(data, blocks=20, seed=1)
+        res = ds.query(
+            "mean",
+            target_rel_err=target,
+            max_blocks=max_blocks,
+            min_blocks=2,
+            use_sketches=False,
+            seed=seed,
+        )
+        assert 1 <= res.blocks_read <= max_blocks
+        a = res["mean"]
+        assert np.all(a.ci_lo <= a.estimate) and np.all(a.estimate <= a.ci_hi)
+        if res.converged:
+            assert res.max_rel_err <= target
+
+else:
+
+    def test_query_invariants():
+        pytest.importorskip("hypothesis")
