@@ -49,10 +49,12 @@ def _register_suites():
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks.kernel_bench import ALL_KERNELS
     from benchmarks.engine_bench import engine_rows
+    from benchmarks.ingest_bench import ingest_rows
     from benchmarks.query_bench import query_rows
 
     SUITES.update({
         "engine": [engine_rows],
+        "ingest": [ingest_rows],
         "query": [query_rows],
         "fig1": [ALL_FIGS[0]],
         "fig2": [ALL_FIGS[1]],

@@ -65,6 +65,15 @@ def two_stage_partition_np(
     if data.shape[0] != spec.num_records:
         raise ValueError(f"data has {data.shape[0]} records, spec says {spec.num_records}")
     P, K = spec.num_original_blocks, spec.num_blocks
+    if spec.num_records % (P * K) != 0:
+        # RSPSpec validates this at construction; hand-built spec-like objects
+        # get a clear message here instead of an opaque reshape error
+        # (mirrors the jax path's divisibility check).
+        raise ValueError(
+            f"spec unsatisfiable: N={spec.num_records} must be divisible by"
+            f" P*K={P * K} (P={P} original blocks x K={K} RSP blocks need"
+            " uniform sub-blocks of delta = N/(P*K) records)"
+        )
     delta = spec.slice_size
     tail = data.shape[1:]
 
@@ -188,14 +197,30 @@ def distributed_rsp_partition(
 # Validation helpers (Definition 2 / Definition 3 empirical checks)
 # ---------------------------------------------------------------------------
 
+def _lex_sorted_rows(x: np.ndarray) -> np.ndarray:
+    """Rows of ``x`` as a byte matrix, sorted lexicographically as *whole
+    rows* -- row (record) identity is preserved, unlike a column-wise sort."""
+    x = np.asarray(x)
+    n = x.shape[0] if x.ndim else 0
+    feat = int(np.prod(x.shape[1:], dtype=np.int64))  # explicit: -1 breaks on n=0
+    rows = np.ascontiguousarray(x.reshape(n, feat))
+    b = rows.view(np.uint8).reshape(n, -1) if rows.size else rows.view(np.uint8)
+    if b.shape[0] <= 1 or b.shape[1] == 0:
+        return b  # nothing to sort (and lexsort needs >= 1 key column)
+    return b[np.lexsort(b.T[::-1])]
+
+
 def is_partition(blocks: np.ndarray, data: np.ndarray) -> bool:
-    """Definition 2: blocks form a partition of ``data`` (as multisets)."""
-    flat = np.asarray(blocks).reshape(-1, *np.asarray(blocks).shape[2:])
-    if flat.shape[0] != data.shape[0]:
+    """Definition 2: blocks form a partition of ``data`` (as multisets of
+    whole records).  Rows are compared as units: lexicographically sorting
+    complete rows keeps record identity, where the per-column sort this
+    replaces validated any pair with equal per-column byte multisets."""
+    blocks = np.asarray(blocks)
+    data = np.asarray(data)
+    flat = blocks.reshape(-1, *blocks.shape[2:])
+    if flat.shape != data.shape:
         return False
-    a = np.sort(flat.reshape(flat.shape[0], -1).view(np.uint8).reshape(flat.shape[0], -1), axis=0)
-    b = np.sort(np.asarray(data).reshape(data.shape[0], -1).view(np.uint8).reshape(data.shape[0], -1), axis=0)
-    return bool(np.array_equal(a, b))
+    return bool(np.array_equal(_lex_sorted_rows(flat), _lex_sorted_rows(data)))
 
 
 def empirical_cdf(x: np.ndarray, thresholds: Sequence[float]) -> np.ndarray:

@@ -17,6 +17,7 @@ Prefer the ``repro.rsp.RSPDataset`` facade (``ds.save(path)`` /
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -27,12 +28,22 @@ import numpy as np
 
 from repro.core.types import BlockDescriptor, RSPSpec
 
+_CHECKSUM_STEP_BYTES = 4 << 20
+
 
 def _checksum(arr: np.ndarray) -> str:
+    """Content hash of one block.  Hashing proceeds in bounded row slabs so
+    memmapped blocks larger than RAM stream through without materializing."""
     h = hashlib.sha256()
     h.update(str(arr.shape).encode())
     h.update(str(arr.dtype).encode())
-    h.update(np.ascontiguousarray(arr).data)
+    if arr.ndim == 0 or arr.shape[0] == 0:
+        h.update(np.ascontiguousarray(arr).data)
+        return h.hexdigest()[:16]
+    row_bytes = max(1, arr.nbytes // arr.shape[0])
+    step = max(1, _CHECKSUM_STEP_BYTES // row_bytes)
+    for a in range(0, arr.shape[0], step):
+        h.update(np.ascontiguousarray(arr[a : a + step]).data)
     return h.hexdigest()[:16]
 
 
@@ -83,29 +94,14 @@ class RSPStore:
                     checksum=_checksum(block),
                 )
             )
-        # drop stale blocks from any previous, larger partition in this root
-        # so derived paths beyond the new K cannot serve old data
-        for stray in os.listdir(self.root):
-            if stray.startswith("block_") and stray.endswith(".npy"):
-                try:
-                    k = int(stray[len("block_"):-len(".npy")])
-                except ValueError:
-                    continue
-                if k >= len(descriptors):
-                    os.remove(os.path.join(self.root, stray))
-        manifest = {
-            "spec": json.loads(spec.to_json()),
-            "blocks": [dataclasses.asdict(d) for d in descriptors],
-        }
-        if summaries is not None:
-            manifest["summaries"] = summaries
-        if meta is not None:
-            manifest["meta"] = meta
-        tmp_manifest = os.path.join(self.root, self.MANIFEST + ".tmp")
-        with open(tmp_manifest, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp_manifest, os.path.join(self.root, self.MANIFEST))
-        self._invalidate()
+        self._sweep_stale(len(descriptors))
+        self._publish_manifest(spec, descriptors, summaries=summaries, meta=meta)
+
+    def create_writer(self, spec: RSPSpec) -> "PartitionWriter":
+        """Open a :class:`PartitionWriter` for streaming ingest: preallocated
+        per-block ``.npy`` temps accepting offset-range row writes, published
+        atomically by ``finalize()`` (see ``repro.rsp.ingest``)."""
+        return PartitionWriter(self, spec)
 
     # -- read ---------------------------------------------------------------
     def spec(self) -> RSPSpec:
@@ -147,6 +143,52 @@ class RSPStore:
         return len(self._manifest()["blocks"])
 
     # -- internals ----------------------------------------------------------
+    def _sweep_stale(self, keep_blocks: int) -> None:
+        """Drop stale blocks from any previous, larger partition in this root
+        (so derived paths beyond the new K cannot serve old data) *and*
+        orphaned ``.tmp.npy`` temps left by a crashed writer -- the
+        single-writer contract means no live writer's temps coexist with a
+        completed write."""
+        for stray in os.listdir(self.root):
+            if not stray.startswith("block_") or not stray.endswith(".npy"):
+                continue
+            path = os.path.join(self.root, stray)
+            if stray.endswith(".tmp.npy"):
+                with contextlib.suppress(FileNotFoundError):
+                    os.remove(path)
+                continue
+            try:
+                k = int(stray[len("block_"):-len(".npy")])
+            except ValueError:
+                continue
+            if k >= keep_blocks:
+                with contextlib.suppress(FileNotFoundError):
+                    os.remove(path)
+
+    def _publish_manifest(
+        self,
+        spec: RSPSpec,
+        descriptors: list[BlockDescriptor],
+        *,
+        summaries: list[dict] | None = None,
+        meta: dict | None = None,
+    ) -> None:
+        """Atomically publish the manifest -- the last step of any write, so
+        readers never observe a manifest ahead of its blocks."""
+        manifest = {
+            "spec": json.loads(spec.to_json()),
+            "blocks": [dataclasses.asdict(d) for d in descriptors],
+        }
+        if summaries is not None:
+            manifest["summaries"] = summaries
+        if meta is not None:
+            manifest["meta"] = meta
+        tmp_manifest = os.path.join(self.root, self.MANIFEST + ".tmp")
+        with open(tmp_manifest, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp_manifest, os.path.join(self.root, self.MANIFEST))
+        self._invalidate()
+
     def _invalidate(self) -> None:
         self._cached_manifest = None
         self._cached_descriptors = None
@@ -168,3 +210,85 @@ class RSPStore:
 
     def _block_path(self, block_id: int) -> str:
         return os.path.join(self.root, f"block_{block_id:05d}.npy")
+
+
+class PartitionWriter:
+    """Offset-range block writer for streaming ingest (``repro.rsp.ingest``).
+
+    Each block is preallocated as a ``<block>.tmp.npy`` temp via
+    ``np.lib.format.open_memmap`` so row slices land directly at their
+    destination offsets with no in-RAM assembly.  ``finalize()`` flushes,
+    computes checksums *from the finished files*, retracts any previously
+    published manifest, renames every temp into place, sweeps strays, and
+    publishes the new manifest last.  A crash before the retraction leaves
+    the old store fully intact (plus ``.tmp.npy`` orphans the next write
+    sweeps); a crash after it leaves *no* manifest -- readers see a clean
+    absence, never a stale manifest over replaced block files.
+
+    Single-writer per store root, like ``write_partition``.
+    """
+
+    def __init__(self, store: RSPStore, spec: RSPSpec):
+        os.makedirs(store.root, exist_ok=True)
+        self.store = store
+        self.spec = spec
+        shape = (spec.block_size, *spec.record_shape)
+        dtype = np.dtype(spec.dtype)
+        self._tmp_paths = [
+            store._block_path(k) + ".tmp.npy" for k in range(spec.num_blocks)
+        ]
+        self._mms: list[np.memmap] | None = [
+            np.lib.format.open_memmap(p, mode="w+", dtype=dtype, shape=shape)
+            for p in self._tmp_paths
+        ]
+
+    def write_rows(
+        self, block_id: int, offsets: np.ndarray, values: np.ndarray
+    ) -> None:
+        """Write ``values`` into rows ``offsets`` of block ``block_id``.
+        Disjoint offset ranges may be written concurrently from worker
+        threads; each (block, row) is written exactly once per ingest."""
+        self._mms[block_id][offsets] = values
+
+    def finalize(
+        self, *, summaries: list[dict] | None = None, meta: dict | None = None
+    ) -> RSPStore:
+        """Publish the partition: checksum finished temps, rename into place,
+        sweep strays, write the manifest.  Returns the store."""
+        if self._mms is None:
+            raise RuntimeError("writer already finalized or aborted")
+        descriptors: list[BlockDescriptor] = []
+        for k, mm in enumerate(self._mms):
+            mm.flush()
+            checksum = _checksum(mm)
+            descriptors.append(
+                BlockDescriptor(
+                    block_id=k,
+                    num_records=int(mm.shape[0]),
+                    path=os.path.basename(self.store._block_path(k)),
+                    checksum=checksum,
+                )
+            )
+        self._mms = None  # drop the memmap references before renaming
+        # retract any previously published manifest BEFORE touching its block
+        # files: if we die mid-swap, readers find no store rather than an old
+        # manifest silently describing a mixture of old and new blocks
+        with contextlib.suppress(FileNotFoundError):
+            os.remove(os.path.join(self.store.root, self.store.MANIFEST))
+        self.store._invalidate()
+        for k, tmp in enumerate(self._tmp_paths):
+            os.replace(tmp, self.store._block_path(k))
+        self.store._sweep_stale(len(descriptors))
+        self.store._publish_manifest(
+            self.spec, descriptors, summaries=summaries, meta=meta
+        )
+        return self.store
+
+    def abort(self) -> None:
+        """Remove the temps (failed ingest); the store root is left exactly
+        as it was -- in particular any previously published manifest and its
+        blocks stay intact."""
+        self._mms = None
+        for tmp in self._tmp_paths:
+            with contextlib.suppress(FileNotFoundError):
+                os.remove(tmp)

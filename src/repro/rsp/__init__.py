@@ -14,11 +14,15 @@ One import surface for the paper's whole workflow::
     ens, hist = ds.ensemble(rsp.make_logreg(28, 2), eval_x=xe, eval_y=ye, g=5)
     mmd = ds.similarity(3, metric="mmd")         # Sec. 7 diagnostics
 
-``partition`` dispatches through a backend registry (numpy streaming, jit
-jax, shard_map collective, Pallas kernel) with capability predicates;
-``backend="auto"`` selects shard_map when a mesh is supplied, Pallas when
-the kernel's shape constraints hold on a TPU host, and numpy streaming
-otherwise.
+``partition`` dispatches through a backend registry (in-memory numpy, the
+out-of-core ``np_stream`` scatter, jit jax, shard_map collective, Pallas
+kernel) with capability predicates; ``backend="auto"`` selects shard_map
+when a mesh is supplied, Pallas when the kernel's shape constraints hold on
+a TPU host, ``np_stream`` for chunked sources (paths, chunk directories,
+record-batch iterators, memmaps) and direct-to-store writes (``out=``),
+and in-memory numpy otherwise.  ``rsp.from_source(src, blocks=K,
+out=path)`` forces the streaming path: corpora that never fit in RAM
+partition in one pass with O(chunk) peak memory (see ``repro.rsp.ingest``).
 
 The free functions in ``repro.core`` (``two_stage_partition_*``,
 ``RSPStore``, ``BlockSampler``, ...) remain as the stable low-level layer
@@ -75,6 +79,15 @@ from repro.rsp.backends import (
     select_backend,
 )
 from repro.rsp.dataset import RSPDataset
+from repro.rsp.ingest import (
+    ArrayChunkSource,
+    ChunkSource,
+    DirectoryChunkSource,
+    IterChunkSource,
+    NpyChunkSource,
+    as_chunk_source,
+    stream_partition,
+)
 from repro.rsp.summaries import (
     BlockSummary,
     combine_summaries,
@@ -85,25 +98,31 @@ from repro.rsp.summaries import (
 
 partition = RSPDataset.partition
 open = RSPDataset.open  # noqa: A001 -- facade verb, mirrors gzip.open
+from_source = RSPDataset.from_source
 
 __all__ = [
     "AUTO",
     "POLICIES",
     "Aggregate",
     "AggregateResult",
+    "ArrayChunkSource",
     "BaseLearner",
     "BlockExecutor",
     "BlockFetcher",
     "BlockLevelEstimator",
     "BlockSampler",
     "BlockSummary",
+    "ChunkSource",
+    "DirectoryChunkSource",
     "Ensemble",
     "EnsembleHistory",
     "ExecutorStats",
     "HostAssignment",
+    "IterChunkSource",
     "MemoryFetcher",
     "MmapFetcher",
     "MomentStats",
+    "NpyChunkSource",
     "PartitionBackend",
     "PartitionRequest",
     "Query",
@@ -116,11 +135,13 @@ __all__ = [
     "StratifiedPolicy",
     "UniformPolicy",
     "WeightedPolicy",
+    "as_chunk_source",
     "as_fetcher",
     "as_query",
     "available_backends",
     "backend_eligibility",
     "combine_summaries",
+    "from_source",
     "get_backend",
     "make_logreg",
     "make_mlp",
@@ -133,6 +154,7 @@ __all__ = [
     "run_partition",
     "select_backend",
     "sketch_dispersion",
+    "stream_partition",
     "streaming_estimate",
     "summarize_block",
     "summarize_blocks",

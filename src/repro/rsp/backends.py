@@ -4,8 +4,13 @@ Each backend runs Algorithm 1 (two-stage RSP partitioning) through a
 different execution substrate and declares a *capability predicate* that
 says whether it can serve a given request:
 
-    np        -- paper-faithful numpy streaming path; always eligible, the
-                 fallback for out-of-core / non-float / non-2D data.
+    np        -- paper-faithful numpy in-memory path; the fallback for
+                 non-float / non-2D array data.
+    np_stream -- out-of-core single-pass scatter (``repro.rsp.ingest``):
+                 anything ``as_chunk_source`` can adapt (memmapped ``.npy``,
+                 chunk-file directories, record-batch iterators, arrays)
+                 streams to a stored RSP (``out=``) or an in-RAM assembly
+                 with O(chunk) peak memory; bit-identical to ``np``.
     jax       -- jit'd in-memory path (vmapped permutation + reshape).
     shard_map -- one collective program over a device mesh (all_to_all);
                  requires a mesh with P = K = mesh size.
@@ -15,8 +20,11 @@ says whether it can serve a given request:
 
 ``backend="auto"`` selects shard_map when a mesh is supplied, Pallas when
 the kernel's shape constraints hold *and* a TPU is attached (off-TPU the
-kernel would run in interpret mode, slower than numpy), and the numpy
-streaming path otherwise (highest ``auto_priority`` whose predicates pass).
+kernel would run in interpret mode, slower than numpy), ``np_stream`` for
+every non-array source (paths, chunk directories, batch iterators,
+memmaps -- the corpora that never fit in RAM) and whenever ``out=`` asks
+for a direct-to-store write, and the in-memory numpy path otherwise
+(highest ``auto_priority`` whose predicates pass).
 """
 
 from __future__ import annotations
@@ -33,21 +41,42 @@ from repro.core.partition import (
     two_stage_partition_jax,
     two_stage_partition_np,
 )
+from repro.core.registry import RSPStore
 from repro.core.types import RSPSpec
 from repro.kernels.rsp_shuffle.ops import rsp_randomize_block
+from repro.rsp.ingest import (
+    is_stream_source,
+    maybe_chunk_source,
+    resolve_stream_source,
+    stream_partition,
+)
 
 AUTO = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
 class PartitionRequest:
-    """Everything a backend needs to decide eligibility and to run."""
+    """Everything a backend needs to decide eligibility and to run.
 
-    data: Any                                   # array-like [N, ...]
+    ``data`` is array-like [N, ...] for the in-memory backends, or anything
+    ``repro.rsp.ingest.as_chunk_source`` adapts (a ``.npy`` path, a chunk
+    directory, a record-batch iterator, a memmap) for ``np_stream``.  The
+    streaming fields (``out``, ``with_summaries``, ``num_classes``,
+    ``label_column``, ``chunk_records``) are read only by ``np_stream``:
+    with ``out`` set its result is the finished :class:`RSPStore` (sketches
+    folded during the write land in the manifest) instead of stacked blocks.
+    """
+
+    data: Any                                   # array-like [N, ...] or ChunkSource
     spec: RSPSpec
     mesh: jax.sharding.Mesh | None = None
     mesh_axis: str = "data"
     permute_assignment: bool = True
+    out: str | None = None
+    with_summaries: bool = True
+    num_classes: int | None = None
+    label_column: int = -1
+    chunk_records: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,13 +89,15 @@ class PartitionBackend:
     preference predicate consulted only by ``backend="auto"`` -- a backend
     that would run but poorly (e.g. an interpret-mode kernel off-TPU) can
     decline auto-selection while remaining explicitly requestable.  ``run``
-    returns the stacked RSP blocks [K, n, ...] as a numpy array.
+    returns the stacked RSP blocks [K, n, ...] as a numpy array, or -- for
+    streaming backends writing directly to ``request.out`` -- the finished
+    :class:`RSPStore`.
     """
 
     name: str
     capabilities: frozenset[str]
     supports: Callable[[PartitionRequest], str | None]
-    run: Callable[[PartitionRequest], np.ndarray]
+    run: Callable[[PartitionRequest], "np.ndarray | RSPStore"]
     auto_priority: int
     auto_eligible: Callable[[PartitionRequest], str | None] | None = None
 
@@ -115,8 +146,17 @@ def select_backend(request: PartitionRequest) -> PartitionBackend:
 
 def run_partition(
     request: PartitionRequest, backend: str = AUTO
-) -> tuple[np.ndarray, str]:
-    """Dispatch a partition request; returns (blocks [K, n, ...], backend)."""
+) -> tuple["np.ndarray | RSPStore", str]:
+    """Dispatch a partition request; returns (result, backend) where the
+    result is the stacked blocks [K, n, ...] or, for a streaming backend
+    writing to ``request.out``, the finished :class:`RSPStore`."""
+    if not isinstance(request.data, np.ndarray):
+        # resolve a path/directory/iterator input to its ChunkSource ONCE:
+        # every capability predicate and the eventual run then reuse it
+        # instead of re-listing directories and re-reading .npy headers
+        src = resolve_stream_source(request.data, chunk_records=request.chunk_records)
+        if src is not None and src is not request.data:
+            request = dataclasses.replace(request, data=src)
     b = select_backend(request) if backend == AUTO else get_backend(backend)
     if backend != AUTO:
         reason = b.supports(request)
@@ -129,8 +169,20 @@ def run_partition(
 # Built-in backends
 # ---------------------------------------------------------------------------
 
+def _non_array_source(req: PartitionRequest) -> str | None:
+    """Refusal reason the in-memory backends share: they can serve any
+    ndarray (memmaps included -- they materialize on use) but not a
+    chunk-stream object, which only ``np_stream`` knows how to drain."""
+    if not isinstance(req.data, np.ndarray) and is_stream_source(req.data):
+        return "streaming ChunkSource input needs backend='np_stream'"
+    return None
+
+
 def _supports_np(req: PartitionRequest) -> str | None:
-    return None  # the streaming fallback serves everything the spec admits
+    reason = _non_array_source(req)
+    if reason is not None:
+        return reason
+    return None  # the in-memory fallback serves every array the spec admits
 
 
 def _run_np(req: PartitionRequest) -> np.ndarray:
@@ -139,7 +191,49 @@ def _run_np(req: PartitionRequest) -> np.ndarray:
     )
 
 
+def _supports_np_stream(req: PartitionRequest) -> str | None:
+    if maybe_chunk_source(req.data) is None:
+        return (
+            "input is not chunkable (need an array, a .npy path, a chunk-file"
+            " directory, a batch sequence, or a ChunkSource)"
+        )
+    return None
+
+
+def _auto_np_stream(req: PartitionRequest) -> str | None:
+    # memmaps, paths, directories, and ChunkSources always stream; in-RAM
+    # arrays stream only for direct-to-store writes (out=); everything else
+    # (plain arrays, ambiguous record lists) keeps the np path, where it is
+    # served with the same bits and no scatter bookkeeping.
+    if is_stream_source(req.data):
+        return None
+    if req.out is not None and isinstance(req.data, np.ndarray):
+        return None
+    return "in-memory input without out= is served by the np path"
+
+
+def _run_np_stream(req: PartitionRequest) -> np.ndarray | RSPStore:
+    # without out= the facade gets stacked in-memory blocks back and computes
+    # summaries the same way as every in-memory backend, so folding sketches
+    # during the scatter would be duplicated work; with out= the folded
+    # sketches ARE the store's manifest summaries (no second corpus scan)
+    result, _ = stream_partition(
+        req.data,
+        req.spec,
+        out=req.out,
+        permute_assignment=req.permute_assignment,
+        with_summaries=req.with_summaries and req.out is not None,
+        num_classes=req.num_classes,
+        label_column=req.label_column,
+        chunk_records=req.chunk_records,
+    )
+    return result
+
+
 def _supports_jax(req: PartitionRequest) -> str | None:
+    reason = _non_array_source(req)
+    if reason is not None:
+        return reason
     return None  # in-memory jit path; spec divisibility is validated upstream
 
 
@@ -155,6 +249,9 @@ def _run_jax(req: PartitionRequest) -> np.ndarray:
 
 
 def _supports_shard_map(req: PartitionRequest) -> str | None:
+    reason = _non_array_source(req)
+    if reason is not None:
+        return reason
     if req.mesh is None:
         return "requires a device mesh"
     if req.mesh_axis not in req.mesh.shape:
@@ -182,6 +279,9 @@ def _run_shard_map(req: PartitionRequest) -> np.ndarray:
 
 
 def _supports_pallas(req: PartitionRequest) -> str | None:
+    reason = _non_array_source(req)
+    if reason is not None:
+        return reason
     shape = np.shape(req.data)
     if len(shape) != 2:
         return f"kernel needs 2-D [records, features] data, got shape {shape}"
@@ -233,10 +333,22 @@ def _run_pallas(req: PartitionRequest) -> np.ndarray:
 register_backend(
     PartitionBackend(
         name="np",
-        capabilities=frozenset({"streaming", "out-of-core"}),
+        capabilities=frozenset({"in-memory"}),
         supports=_supports_np,
         run=_run_np,
         auto_priority=20,
+    )
+)
+register_backend(
+    PartitionBackend(
+        name="np_stream",
+        capabilities=frozenset({"streaming", "out-of-core", "direct-to-store"}),
+        supports=_supports_np_stream,
+        run=_run_np_stream,
+        # above np: wins auto for everything chunkable unless auto_eligible
+        # hands plain in-RAM arrays back to the np path
+        auto_priority=25,
+        auto_eligible=_auto_np_stream,
     )
 )
 register_backend(

@@ -51,6 +51,7 @@ from repro.core.sampler import (
 from repro.core.similarity import ks_statistic, max_label_divergence, mmd_block_vs_data
 from repro.core.types import RSPSpec
 from repro.rsp.backends import AUTO, PartitionRequest, run_partition
+from repro.rsp.ingest import resolve_stream_source
 from repro.rsp.engine import (
     BlockExecutor,
     BlockFetcher,
@@ -116,24 +117,50 @@ class RSPDataset:
         num_classes: int | None = None,
         label_column: int = -1,
         summaries: bool = True,
+        out: str | None = None,
+        chunk_records: int | None = None,
     ) -> "RSPDataset":
         """Partition ``data`` [N, ...] into an RSP of ``blocks`` blocks.
 
-        ``backend="auto"`` picks shard_map when ``mesh`` is supplied, the
-        Pallas kernel when its shape constraints hold on a TPU host, and
-        the numpy streaming path otherwise; pass an explicit name to force
-        one.
-        ``num_classes`` marks column ``label_column`` as a class label so
-        label histograms join the per-block summaries and ``.ensemble`` /
-        ``.label_divergence`` know how to split records.
+        ``data`` may be an in-memory array, or any streaming source
+        ``repro.rsp.ingest.as_chunk_source`` adapts (a ``.npy`` path read
+        via mmap, a directory of chunk files, a record-batch
+        ``ChunkSource``, a memmap) -- streaming sources never load the
+        corpus whole.  ``backend="auto"`` picks shard_map when ``mesh`` is
+        supplied, the Pallas kernel when its shape constraints hold on a
+        TPU host, the out-of-core ``np_stream`` scatter for streaming
+        sources and whenever ``out=`` is given, and the in-memory numpy
+        path otherwise; pass an explicit name to force one.
+
+        ``out`` writes the partition directly into a store at that path:
+        the streaming backend scatters chunk slices straight to their
+        block-file offsets (peak memory O(chunk), the corpus never
+        materializes) and the returned dataset is store-backed; in-memory
+        backends save their result there.  ``num_classes`` marks column
+        ``label_column`` as a class label so label histograms join the
+        per-block summaries and ``.ensemble`` / ``.label_divergence`` know
+        how to split records.
         """
-        n = np.shape(data)[0]
+        # memmaps are ndarrays: when an in-memory backend is forced they stay
+        # raw (it serves them fine); under auto/np_stream they stream
+        src = None
+        if not isinstance(data, np.ndarray) or backend in (AUTO, "np_stream"):
+            src = resolve_stream_source(data, chunk_records=chunk_records)
+        if src is not None:
+            data = src
+            n = src.num_records
+            record_shape = tuple(src.record_shape)
+            dtype = str(np.dtype(src.dtype))
+        else:
+            n = np.shape(data)[0]
+            record_shape = tuple(np.shape(data)[1:])
+            dtype = str(np.dtype(getattr(data, "dtype", np.float32)))
         spec = RSPSpec(
             num_records=n,
             num_blocks=blocks,
             num_original_blocks=blocks if original_blocks is None else original_blocks,
-            record_shape=tuple(np.shape(data)[1:]),
-            dtype=str(np.dtype(getattr(data, "dtype", np.float32))),
+            record_shape=record_shape,
+            dtype=dtype,
             seed=seed,
         )
         request = PartitionRequest(
@@ -142,18 +169,72 @@ class RSPDataset:
             mesh=mesh,
             mesh_axis=mesh_axis,
             permute_assignment=permute_assignment,
+            out=out,
+            with_summaries=summaries,
+            num_classes=num_classes,
+            label_column=label_column,
+            chunk_records=chunk_records,
         )
-        out, chosen = run_partition(request, backend=backend)
+        result, chosen = run_partition(request, backend=backend)
+        if isinstance(result, RSPStore):
+            # streaming backend wrote directly to the store; sketches folded
+            # during the write are already in its manifest
+            raw = result.summaries()
+            return cls(
+                spec,
+                store=result,
+                backend=chosen,
+                summaries=None if raw is None else [BlockSummary.from_dict(d) for d in raw],
+                num_classes=num_classes,
+                label_column=label_column,
+            )
         ds = cls(
             spec,
-            blocks=out,
+            blocks=result,
             backend=chosen,
             num_classes=num_classes,
             label_column=label_column,
         )
         if summaries:
             ds._summaries = ds._compute_summaries()
+        if out is not None:
+            ds.save(out)
         return ds
+
+    @classmethod
+    def from_source(
+        cls,
+        source: Any,
+        blocks: int,
+        *,
+        out: str | None = None,
+        original_blocks: int | None = None,
+        seed: int = 0,
+        permute_assignment: bool = True,
+        num_classes: int | None = None,
+        label_column: int = -1,
+        summaries: bool = True,
+        chunk_records: int | None = None,
+    ) -> "RSPDataset":
+        """Build an RSP from a chunked source with bounded memory (the
+        out-of-core ingest path, forced).  ``source`` is anything
+        ``as_chunk_source`` adapts; with ``out`` set the corpus streams
+        straight into a stored RSP whose manifest carries the
+        partition-time sketches -- peak memory stays O(chunk + write
+        buffers) no matter how large the corpus is."""
+        return cls.partition(
+            source,
+            blocks,
+            original_blocks=original_blocks,
+            seed=seed,
+            backend="np_stream",
+            permute_assignment=permute_assignment,
+            num_classes=num_classes,
+            label_column=label_column,
+            summaries=summaries,
+            out=out,
+            chunk_records=chunk_records,
+        )
 
     # ------------------------------------------------------------------
     # Block access: one executor owns all block movement

@@ -1,0 +1,361 @@
+"""Out-of-core streaming partitioner tests (``repro.rsp.ingest``):
+streamed-vs-in-memory bit equivalence across chunkings, direct-to-store
+writes with partition-time sketches, crash atomicity, and the ``np_stream``
+backend registry entry."""
+
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip below; the rest of the module runs
+    HAVE_HYPOTHESIS = False
+
+from repro import rsp
+from repro.core import RSPSpec, two_stage_partition_np
+from repro.rsp.backends import PartitionRequest, select_backend
+from repro.rsp.ingest import (
+    ArrayChunkSource,
+    DirectoryChunkSource,
+    IterChunkSource,
+    NpyChunkSource,
+    as_chunk_source,
+    is_stream_source,
+    stream_partition,
+)
+from repro.rsp.summaries import summarize_blocks
+
+
+def _data(n, f=5, seed=0, num_classes=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    if num_classes is not None:
+        x[:, -1] = rng.integers(0, num_classes, size=n)
+    return x
+
+
+def _spec(n, K, P, seed=3, f=5):
+    return RSPSpec(num_records=n, num_blocks=K, num_original_blocks=P,
+                   record_shape=(f,), dtype="float32", seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Bit-for-bit equivalence with the in-memory reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [7, 100, 480, 481, 1920])  # 480 aligns with R=480
+def test_streamed_equals_in_memory(chunk):
+    data = _data(1920)
+    spec = _spec(1920, K=8, P=4)
+    ref = two_stage_partition_np(data, spec)
+    got, _ = stream_partition(ArrayChunkSource(data, chunk_records=chunk), spec)
+    assert got.dtype == ref.dtype
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_streamed_equals_in_memory_sync_workers():
+    data = _data(960)
+    spec = _spec(960, K=4, P=2)
+    ref = two_stage_partition_np(data, spec)
+    for workers in (0, 1, 4):
+        got, _ = stream_partition(
+            ArrayChunkSource(data, chunk_records=111), spec, workers=workers
+        )
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_streamed_no_assignment_permutation():
+    data = _data(960)
+    spec = _spec(960, K=4, P=2)
+    ref = two_stage_partition_np(data, spec, permute_assignment=False)
+    got, _ = stream_partition(
+        ArrayChunkSource(data, chunk_records=77), spec, permute_assignment=False
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_streamed_scalar_records():
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(640,)).astype(np.float64)
+    spec = RSPSpec(num_records=640, num_blocks=4, num_original_blocks=4,
+                   record_shape=(), dtype="float64", seed=5)
+    ref = two_stage_partition_np(data, spec)
+    got, _ = stream_partition(ArrayChunkSource(data, chunk_records=99), spec)
+    np.testing.assert_array_equal(got, ref)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        chunk=st.integers(min_value=1, max_value=640),
+        pk=st.sampled_from([(1, 4), (2, 4), (4, 2), (4, 4), (8, 1)]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_streamed_equivalence_property(chunk, pk, seed):
+        P, K = pk
+        data = _data(640, f=3, seed=2)
+        spec = RSPSpec(num_records=640, num_blocks=K, num_original_blocks=P,
+                       record_shape=(3,), dtype="float32", seed=seed)
+        ref = two_stage_partition_np(data, spec)
+        got, _ = stream_partition(ArrayChunkSource(data, chunk_records=chunk), spec)
+        np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Direct-to-store ingest: atomic publish, checksums, folded sketches
+# ---------------------------------------------------------------------------
+
+def test_store_ingest_bit_identical_and_verified(tmp_path):
+    data = _data(1920, num_classes=2)
+    spec = _spec(1920, K=8, P=4)
+    ref = two_stage_partition_np(data, spec)
+    store, summaries = stream_partition(
+        ArrayChunkSource(data, chunk_records=333), spec,
+        out=str(tmp_path / "rsp"), num_classes=2,
+    )
+    assert store.num_blocks() == 8
+    for k in range(8):
+        np.testing.assert_array_equal(
+            np.asarray(store.load_block(k, verify=True)), ref[k]
+        )
+    # sketches folded during the write match a post-hoc full summarize
+    exact = summarize_blocks(ref, label_column=-1, num_classes=2)
+    for s, e in zip(summaries, exact):
+        assert s.count == e.count
+        np.testing.assert_allclose(s.mean, e.mean, rtol=1e-9, atol=1e-11)
+        np.testing.assert_allclose(s.m2, e.m2, rtol=1e-7, atol=1e-9)
+        np.testing.assert_array_equal(s.min, e.min)
+        np.testing.assert_array_equal(s.max, e.max)
+        np.testing.assert_array_equal(s.label_hist, e.label_hist)
+    # and they landed in the manifest: reopening sees them without any reads
+    ds = rsp.open(str(tmp_path / "rsp"))
+    assert ds.has_summaries and ds.num_classes == 2
+    assert ds.backend == "np_stream"
+
+
+def test_crash_mid_ingest_publishes_nothing_and_reingest_succeeds(tmp_path):
+    data = _data(960)
+    spec = _spec(960, K=4, P=2)
+    out = str(tmp_path / "rsp")
+
+    def exploding_chunks():
+        for a in range(0, 960, 120):
+            if a >= 360:
+                raise RuntimeError("source died mid-stream")
+            yield data[a : a + 120]
+
+    src = IterChunkSource(exploding_chunks(), num_records=960,
+                          record_shape=(5,), dtype=np.float32)
+    with pytest.raises(RuntimeError, match="died mid-stream"):
+        stream_partition(src, spec, out=out)
+    # no manifest published, no temps left behind
+    assert not os.path.exists(os.path.join(out, "manifest.json"))
+    assert [f for f in os.listdir(out) if f.endswith(".tmp.npy")] == []
+    with pytest.raises(FileNotFoundError):
+        rsp.open(out)
+    # re-ingest into the same root succeeds and is bit-identical
+    store, _ = stream_partition(ArrayChunkSource(data, chunk_records=120), spec, out=out)
+    ref = two_stage_partition_np(data, spec)
+    for k in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(store.load_block(k, verify=True)), ref[k]
+        )
+
+
+def test_short_source_aborts(tmp_path):
+    data = _data(960)
+    spec = _spec(960, K=4, P=2)
+    src = IterChunkSource([data[:480]])  # half the records the spec promises
+    with pytest.raises(ValueError, match="960"):
+        stream_partition(src, spec, out=str(tmp_path / "rsp"))
+    assert not os.path.exists(os.path.join(str(tmp_path / "rsp"), "manifest.json"))
+
+
+# ---------------------------------------------------------------------------
+# ChunkSource adapters
+# ---------------------------------------------------------------------------
+
+def test_npy_and_directory_sources(tmp_path):
+    data = _data(1280, f=4)
+    npy = tmp_path / "corpus.npy"
+    np.save(npy, data)
+    src = as_chunk_source(str(npy), chunk_records=300)
+    assert isinstance(src, NpyChunkSource)
+    assert (src.num_records, src.record_shape, src.dtype) == (1280, (4,), np.float32)
+    np.testing.assert_array_equal(np.concatenate(list(src.chunks())), data)
+
+    # directory of chunk files, concatenated in sorted order
+    d = tmp_path / "chunks"
+    d.mkdir()
+    np.save(d / "part_000.npy", data[:500])
+    np.save(d / "part_001.npy", data[500:900])
+    np.save(d / "part_002.npy", data[900:])
+    dsrc = as_chunk_source(str(d))
+    assert isinstance(dsrc, DirectoryChunkSource)
+    assert dsrc.num_records == 1280
+    np.testing.assert_array_equal(np.concatenate(list(dsrc.chunks())), data)
+
+    spec = RSPSpec(num_records=1280, num_blocks=4, num_original_blocks=4,
+                   record_shape=(4,), dtype="float32", seed=11)
+    ref = two_stage_partition_np(data, spec)
+    got, _ = stream_partition(dsrc, spec)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_iter_source_one_shot_guard():
+    chunks = iter([np.zeros((4, 2), np.float32)])
+    src = IterChunkSource(chunks, num_records=4, record_shape=(2,), dtype=np.float32)
+    list(src.chunks())
+    with pytest.raises(RuntimeError, match="already"):
+        list(src.chunks())
+    with pytest.raises(ValueError, match="up front"):
+        IterChunkSource(iter([]))
+
+
+def test_buffer_reusing_producer_is_safe():
+    """A source that yields the SAME preallocated buffer every batch must not
+    corrupt the partition: async scatter workers read segments after the
+    producer has already overwritten the buffer."""
+    data = _data(1920)
+    spec = _spec(1920, K=8, P=4)
+    ref = two_stage_partition_np(data, spec)
+
+    def reused_buffer_batches():
+        buf = np.empty((120, 5), dtype=np.float32)
+        for a in range(0, 1920, 120):
+            buf[:] = data[a : a + 120]
+            yield buf  # same object every time
+
+    src = IterChunkSource(reused_buffer_batches(), num_records=1920,
+                          record_shape=(5,), dtype=np.float32)
+    got, _ = stream_partition(src, spec, workers=4)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_eligibility_does_not_raise_on_broken_path_sources(tmp_path):
+    """Capability predicates keep their reason-or-None contract even when
+    adapter construction itself fails (e.g. an empty chunk directory)."""
+    empty = tmp_path / "empty_dir"
+    empty.mkdir()
+    spec = _spec(960, K=4, P=2)
+    reasons = rsp.backend_eligibility(PartitionRequest(data=str(empty), spec=spec))
+    assert "not chunkable" in reasons["np_stream"]
+    # ...while the facade surfaces the adapter's detailed reason
+    with pytest.raises(ValueError, match="no .npy chunk files"):
+        rsp.partition(str(empty), blocks=4)
+
+
+def test_is_stream_source_classification(tmp_path):
+    arr = np.zeros((8, 2), np.float32)
+    assert not is_stream_source(arr)                      # in-RAM array -> np path
+    np.save(tmp_path / "c.npy", arr)
+    assert is_stream_source(str(tmp_path / "c.npy"))      # path streams
+    mm = np.load(tmp_path / "c.npy", mmap_mode="r")
+    assert is_stream_source(mm)                           # memmap streams
+    assert not is_stream_source(object())                 # unadaptable
+
+
+# ---------------------------------------------------------------------------
+# Backend registry + facade wiring
+# ---------------------------------------------------------------------------
+
+def test_np_stream_registered_and_auto_selected(tmp_path):
+    assert "np_stream" in rsp.available_backends()
+    data = _data(960)
+    spec = _spec(960, K=4, P=2)
+    npy = tmp_path / "corpus.npy"
+    np.save(npy, data)
+    src = as_chunk_source(str(npy))
+    assert select_backend(PartitionRequest(data=src, spec=spec)).name == "np_stream"
+    # plain in-RAM arrays keep the np path unless out= asks for a store
+    assert select_backend(PartitionRequest(data=data, spec=spec)).name == "np"
+    assert (
+        select_backend(
+            PartitionRequest(data=data, spec=spec, out=str(tmp_path / "s"))
+        ).name
+        == "np_stream"
+    )
+    # in-memory backends refuse streaming sources with a clear reason
+    reasons = rsp.backend_eligibility(PartitionRequest(data=src, spec=spec))
+    assert reasons["np_stream"] is None
+    for name in ("np", "jax", "shard_map", "pallas"):
+        assert "np_stream" in reasons[name]
+
+
+def test_memmap_still_served_by_explicit_in_memory_backends(tmp_path):
+    """Regression: a memmap is a plain ndarray to the in-memory backends --
+    explicit backend='np'/'jax' must keep working on it (auto still prefers
+    the streaming path for memmaps)."""
+    data = _data(960)
+    np.save(tmp_path / "c.npy", data)
+    mm = np.load(tmp_path / "c.npy", mmap_mode="r")
+    spec = _spec(960, K=4, P=2, seed=13)
+    ref = two_stage_partition_np(data, spec)
+    ds = rsp.partition(mm, blocks=4, original_blocks=2, seed=13, backend="np")
+    np.testing.assert_array_equal(ds.stacked(), ref)
+    ds_jax = rsp.partition(mm, blocks=4, original_blocks=2, seed=13, backend="jax")
+    assert ds_jax.backend == "jax"
+    assert select_backend(PartitionRequest(data=mm, spec=spec)).name == "np_stream"
+
+
+def test_run_partition_resolves_path_source_once(tmp_path, monkeypatch):
+    """Raw-registry dispatch with a path input must build the chunk-source
+    adapter once, not once per capability predicate."""
+    import repro.rsp.ingest as ingest_mod
+    from repro.rsp.backends import run_partition
+
+    data = _data(960)
+    np.save(tmp_path / "c.npy", data)
+    spec = _spec(960, K=4, P=2)
+    calls = []
+    orig = ingest_mod.NpyChunkSource.__init__
+
+    def counting(self, path, **kw):
+        calls.append(path)
+        orig(self, path, **kw)
+
+    monkeypatch.setattr(ingest_mod.NpyChunkSource, "__init__", counting)
+    result, chosen = run_partition(
+        PartitionRequest(data=str(tmp_path / "c.npy"), spec=spec)
+    )
+    assert chosen == "np_stream" and len(calls) == 1
+    np.testing.assert_array_equal(result, two_stage_partition_np(data, spec))
+
+
+def test_facade_partition_from_path_and_from_source(tmp_path):
+    data = _data(1920)
+    spec = _spec(1920, K=8, P=8, seed=21)
+    ref = two_stage_partition_np(data, spec)
+    npy = tmp_path / "corpus.npy"
+    np.save(npy, data)
+
+    ds = rsp.partition(str(npy), blocks=8, seed=21, out=str(tmp_path / "st"))
+    assert ds.backend == "np_stream" and ds.store is not None
+    np.testing.assert_array_equal(ds.take(range(8)), ref)
+    assert ds.has_summaries  # folded during the write, no extra scan
+
+    # from_source forces streaming even for an in-RAM array, store-less
+    ds2 = rsp.from_source(data, blocks=8, seed=21, chunk_records=217)
+    assert ds2.backend == "np_stream"
+    np.testing.assert_array_equal(ds2.stacked(), ref)
+    ds.close()
+
+
+def test_facade_streamed_query_matches_full_scan(tmp_path):
+    data = _data(4096, f=6, seed=8)
+    npy = tmp_path / "corpus.npy"
+    np.save(npy, data)
+    ds = rsp.from_source(str(npy), blocks=16, out=str(tmp_path / "st"), seed=2)
+    before = ds.executor.stats()
+    res = ds.query(["mean", "count"])
+    assert res.from_sketches
+    assert (ds.executor.stats() - before).blocks_fetched == 0
+    np.testing.assert_allclose(
+        res["mean"].estimate, data.mean(axis=0, dtype=np.float64), atol=1e-6
+    )
+    assert float(res["count"].estimate) == 4096
+    ds.close()

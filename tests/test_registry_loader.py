@@ -28,6 +28,112 @@ def test_store_roundtrip(store):
         np.testing.assert_array_equal(np.asarray(s.load_block(k, verify=True)), blocks[k])
 
 
+def test_write_sweeps_orphaned_writer_temps(store):
+    """Regression: ``block_*.npy.tmp.npy`` temps from a crashed writer used
+    to survive the stale-block sweep forever (the block-id parse raised and
+    skipped them)."""
+    import os
+
+    s, blocks, spec = store
+    orphan = os.path.join(s.root, "block_00002.npy.tmp.npy")
+    with open(orphan, "wb") as f:
+        f.write(b"half-written junk")
+    stale = os.path.join(s.root, "block_00099.npy")
+    np.save(stale, np.zeros((2, 2)))
+    s.write_partition(blocks, spec)
+    assert not os.path.exists(orphan)
+    assert not os.path.exists(stale)
+    # the real blocks are untouched and still verify
+    for k in range(8):
+        np.testing.assert_array_equal(np.asarray(s.load_block(k, verify=True)), blocks[k])
+
+
+def test_partition_writer_offset_ranges_and_finalize(store, tmp_path):
+    """RSPStore.create_writer: offset-range writes land at their destinations,
+    checksums come from the finished files, manifest publishes last."""
+    import os
+
+    _, blocks, base = store
+    spec = RSPSpec(num_records=base.num_records, num_blocks=base.num_blocks,
+                   num_original_blocks=base.num_original_blocks,
+                   record_shape=(blocks.shape[-1],), dtype=str(blocks.dtype),
+                   seed=base.seed)
+    root = str(tmp_path / "streamed")
+    writer = RSPStore(root).create_writer(spec)
+    # write each block in two interleaved halves, out of order
+    n = spec.block_size
+    evens, odds = np.arange(0, n, 2), np.arange(1, n, 2)
+    for k in range(spec.num_blocks):
+        writer.write_rows(k, odds, blocks[k][odds])
+    assert not os.path.exists(os.path.join(root, "manifest.json"))  # not yet published
+    for k in range(spec.num_blocks):
+        writer.write_rows(k, evens, blocks[k][evens])
+    out = writer.finalize(meta={"backend": "np_stream"})
+    assert out.num_blocks() == spec.num_blocks
+    for k in range(spec.num_blocks):
+        np.testing.assert_array_equal(
+            np.asarray(out.load_block(k, verify=True)), blocks[k]
+        )
+    assert [f for f in os.listdir(root) if f.endswith(".tmp.npy")] == []
+    with pytest.raises(RuntimeError):
+        writer.finalize()  # double-finalize is an error
+
+
+def test_partition_writer_crash_mid_swap_leaves_no_stale_manifest(store, tmp_path, monkeypatch):
+    """Regression: finalize over a previously published store retracts the
+    old manifest BEFORE renaming new blocks over its files -- a crash
+    mid-swap must leave readers a clean absence, never a live manifest
+    describing a mixture of old and new blocks."""
+    import os
+
+    _, blocks, base = store
+    spec = RSPSpec(num_records=base.num_records, num_blocks=base.num_blocks,
+                   num_original_blocks=base.num_original_blocks,
+                   record_shape=(blocks.shape[-1],), dtype=str(blocks.dtype),
+                   seed=base.seed)
+    root = str(tmp_path / "streamed")
+    s = RSPStore(root)
+    s.write_partition(blocks, spec)
+
+    writer = s.create_writer(spec)
+    for k in range(spec.num_blocks):
+        writer.write_rows(k, np.arange(spec.block_size), blocks[k][::-1])
+    monkeypatch.setattr(
+        RSPStore, "_sweep_stale",
+        lambda self, keep: (_ for _ in ()).throw(OSError("crash mid-swap")),
+    )
+    with pytest.raises(OSError, match="mid-swap"):
+        writer.finalize()
+    assert not os.path.exists(os.path.join(root, "manifest.json"))
+    monkeypatch.undo()
+    # recovery: a fresh ingest into the same root publishes cleanly
+    writer2 = s.create_writer(spec)
+    for k in range(spec.num_blocks):
+        writer2.write_rows(k, np.arange(spec.block_size), blocks[k])
+    out = writer2.finalize()
+    for k in range(spec.num_blocks):
+        np.testing.assert_array_equal(np.asarray(out.load_block(k, verify=True)), blocks[k])
+
+
+def test_partition_writer_abort_leaves_previous_publish_intact(store, tmp_path):
+    import os
+
+    _, blocks, base = store
+    spec = RSPSpec(num_records=base.num_records, num_blocks=base.num_blocks,
+                   num_original_blocks=base.num_original_blocks,
+                   record_shape=(blocks.shape[-1],), dtype=str(blocks.dtype),
+                   seed=base.seed)
+    root = str(tmp_path / "streamed")
+    s = RSPStore(root)
+    s.write_partition(blocks, spec)
+    writer = s.create_writer(spec)
+    writer.write_rows(0, np.arange(4), np.zeros((4, blocks.shape[-1]), np.float32))
+    writer.abort()
+    assert [f for f in os.listdir(root) if f.endswith(".tmp.npy")] == []
+    for k in range(spec.num_blocks):  # published blocks untouched
+        np.testing.assert_array_equal(np.asarray(s.load_block(k, verify=True)), blocks[k])
+
+
 def test_store_checksum_detects_corruption(store, tmp_path):
     s, blocks, _ = store
     path = s._block_path(2)

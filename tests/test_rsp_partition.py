@@ -61,6 +61,42 @@ def test_spec_validation():
         RSPSpec(num_records=100, num_blocks=10, num_original_blocks=4)
 
 
+def test_np_partition_rejects_unsatisfiable_spec_clearly():
+    """A hand-built spec bypassing RSPSpec validation (e.g. a spec-like
+    object) must fail at entry with a clear message, not a reshape error."""
+    fields = dict(num_records=100, num_blocks=3, num_original_blocks=2,
+                  record_shape=(), dtype="float64", seed=0)
+    spec = object.__new__(RSPSpec)  # skip __post_init__ like a foreign object
+    for name, value in fields.items():
+        object.__setattr__(spec, name, value)
+    with pytest.raises(ValueError, match=r"unsatisfiable.*P\*K"):
+        two_stage_partition_np(np.zeros(100), spec)
+
+
+def test_is_partition_rejects_column_multiset_false_positive():
+    """Regression: the old column-wise byte sort validated any pair with
+    equal per-column byte multisets.  These two record sets differ as row
+    multisets ({01, 10} vs {00, 11}) but match per column."""
+    data = np.array([[0.0, 1.0], [1.0, 0.0]], dtype=np.float32)
+    fake_blocks = np.array([[[0.0, 0.0]], [[1.0, 1.0]]], dtype=np.float32)
+    assert not is_partition(fake_blocks, data)
+    real_blocks = np.array([[[1.0, 0.0]], [[0.0, 1.0]]], dtype=np.float32)
+    assert is_partition(real_blocks, data)
+
+
+def test_is_partition_shape_and_duplicate_handling():
+    data = np.array([[1.0, 2.0], [1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])
+    blocks = data.reshape(2, 2, 2)[::-1]  # reordered blocks still a partition
+    assert is_partition(blocks, data)
+    # dropping one duplicate and doubling another is NOT a partition
+    tampered = np.array([[1.0, 2.0], [3.0, 4.0], [3.0, 4.0], [5.0, 6.0]])
+    assert not is_partition(tampered.reshape(2, 2, 2), data)
+    # record-shape mismatch is a clean False, not a crash
+    assert not is_partition(np.zeros((2, 2, 3)), data)
+    # zero-record inputs are a trivially-true partition, not a reshape crash
+    assert is_partition(np.zeros((2, 0, 2)), np.zeros((0, 2)))
+
+
 # ---------------------------------------------------------------------------
 # Lemma 1: E[F_k(x)] = F(x) -- block CDFs are unbiased for the data CDF.
 # Empirical test: average block CDF over many partition draws converges to
