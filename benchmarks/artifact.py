@@ -1,0 +1,52 @@
+"""Benchmark artifacts: one machine-readable ``BENCH_<suite>.json`` per suite.
+
+The CSV the harness prints is for eyeballs; CI and regression tooling want a
+stable file.  ``write_artifact`` serializes a suite's ``(name, value,
+derived)`` rows -- the exact rows the CSV shows -- to
+``results/bench/BENCH_<suite>.json`` (atomic rename, so a crashed run never
+leaves a half-written artifact).  ``benchmarks.run`` writes one per suite it
+executes; standalone benches (``serve_bench --smoke`` etc.) call it directly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def default_out_dir() -> str:
+    return os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def write_artifact(
+    suite: str,
+    rows: list[tuple[str, float, str]],
+    *,
+    extra: dict | None = None,
+    out_dir: str | None = None,
+) -> str:
+    """Write ``BENCH_<suite>.json`` and return its path.
+
+    ``rows`` are the harness rows ``(name, value, derived)``; ``extra``
+    merges additional top-level keys (e.g. gate outcomes) into the payload.
+    """
+    out_dir = out_dir or default_out_dir()
+    os.makedirs(out_dir, exist_ok=True)
+    payload: dict = {
+        "suite": suite,
+        "generated_unix": time.time(),
+        "rows": [
+            {"name": name, "value": float(value), "derived": derived}
+            for name, value, derived in rows
+        ],
+    }
+    if extra:
+        payload.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path

@@ -1,5 +1,7 @@
 """Benchmark harness: one function per paper table/figure plus kernel and
-dry-run/roofline tables.  Prints ``name,us_per_call,derived`` CSV.
+dry-run/roofline tables.  Prints ``name,us_per_call,derived`` CSV and writes
+one machine-readable ``results/bench/BENCH_<suite>.json`` artifact per suite
+executed (see :mod:`benchmarks.artifact`).
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run fig6 kernels
@@ -11,6 +13,8 @@ import json
 import os
 import sys
 import traceback
+
+from benchmarks.artifact import write_artifact
 
 
 def _roofline_rows() -> list[tuple[str, float, str]]:
@@ -51,11 +55,13 @@ def _register_suites():
     from benchmarks.engine_bench import engine_rows
     from benchmarks.ingest_bench import ingest_rows
     from benchmarks.query_bench import query_rows
+    from benchmarks.serve_bench import serve_rows
 
     SUITES.update({
         "engine": [engine_rows],
         "ingest": [ingest_rows],
         "query": [query_rows],
+        "serve": [serve_rows],
         "fig1": [ALL_FIGS[0]],
         "fig2": [ALL_FIGS[1]],
         "fig34": [ALL_FIGS[2]],
@@ -70,22 +76,26 @@ def _register_suites():
 def main() -> None:
     _register_suites()
     which = sys.argv[1:] or ["paper", "kernels", "roofline"]
-    fns = []
     for w in which:
         if w not in SUITES:
             print(f"unknown suite {w}; choices: {sorted(SUITES)}", file=sys.stderr)
             sys.exit(2)
-        fns.extend(SUITES[w])
     print("name,us_per_call,derived")
     failed = False
-    for fn in fns:
-        try:
-            for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}")
-        except Exception:
-            failed = True
-            print(f"{fn.__name__},NaN,ERROR", flush=True)
-            traceback.print_exc()
+    for suite in which:
+        rows: list[tuple[str, float, str]] = []
+        errors = 0
+        for fn in SUITES[suite]:
+            try:
+                for name, us, derived in fn():
+                    print(f"{name},{us:.1f},{derived}")
+                    rows.append((name, us, derived))
+            except Exception:
+                failed = True
+                errors += 1
+                print(f"{fn.__name__},NaN,ERROR", flush=True)
+                traceback.print_exc()
+        write_artifact(suite, rows, extra={"errors": errors})
     if failed:
         sys.exit(1)
 

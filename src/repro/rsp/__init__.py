@@ -52,6 +52,7 @@ from repro.core.types import RSPSpec
 from repro.rsp.engine import (
     BlockExecutor,
     BlockFetcher,
+    CallerStats,
     ExecutorStats,
     MemoryFetcher,
     MmapFetcher,
@@ -112,6 +113,7 @@ __all__ = [
     "BlockLevelEstimator",
     "BlockSampler",
     "BlockSummary",
+    "CallerStats",
     "ChunkSource",
     "DirectoryChunkSource",
     "Ensemble",

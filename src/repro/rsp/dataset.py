@@ -326,10 +326,10 @@ class RSPDataset:
         triggering the full-corpus pass that computes them)."""
         return self._summaries is not None
 
-    def _compute_summaries(self) -> list[BlockSummary]:
+    def _compute_summaries(self, counter=None) -> list[BlockSummary]:
         label_column = self.label_column if self.num_classes is not None else None
         return summarize_blocks(
-            self.executor.map_blocks(None, range(self.num_blocks)),
+            self.executor.map_blocks(None, range(self.num_blocks), counter=counter),
             label_column=label_column,
             num_classes=self.num_classes,
         )
@@ -526,6 +526,21 @@ class RSPDataset:
         from repro.rsp.query import QueryExecutor, as_query
 
         return QueryExecutor(self, as_query(aggregates, **kwargs)).stream()
+
+    def serve(self, **kwargs):
+        """A concurrent multi-tenant :class:`~repro.serve.QueryService` over
+        this dataset: many simultaneous queries share this dataset's
+        ``BlockExecutor`` block cache, an admission controller bounds
+        in-flight block-I/O demand, a deadline-aware scheduler interleaves
+        one-block progressive steps across tenants, and every query can
+        return an anytime result when its deadline fires.  Keyword arguments
+        (``capacity=``, ``max_queue=``, ``workers=``, ``seed=``,
+        ``default_deadline_ms=``) forward to ``QueryService``.  Use as a
+        context manager or call ``close()`` to release the worker threads.
+        """
+        from repro.serve.query_service import QueryService
+
+        return QueryService(self, **kwargs)
 
     # ------------------------------------------------------------------
     # Ensemble learning (Sec. 9, Algorithm 2)

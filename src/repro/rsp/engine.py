@@ -69,12 +69,57 @@ class ExecutorStats:
     def blocks_fetched(self) -> int:
         return self.misses
 
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
     def __sub__(self, other: "ExecutorStats") -> "ExecutorStats":
         return ExecutorStats(
             hits=self.hits - other.hits,
             misses=self.misses - other.misses,
             evictions=self.evictions - other.evictions,
         )
+
+    def __add__(self, other: "ExecutorStats") -> "ExecutorStats":
+        return ExecutorStats(
+            hits=self.hits + other.hits,
+            misses=self.misses + other.misses,
+            evictions=self.evictions + other.evictions,
+        )
+
+
+class CallerStats:
+    """A per-caller block-access counter.
+
+    Snapshot deltas of the executor-wide :meth:`BlockExecutor.stats` are racy
+    the moment two consumers interleave on one executor: each would claim the
+    other's I/O.  Instead a caller passes its own ``CallerStats`` into
+    ``fetch`` / ``fetch_async`` / ``map_blocks`` and every access is counted
+    on *both* the executor's global counters and the caller's -- so per-caller
+    counts always sum to the executor total, no matter how requests
+    interleave.  Thread-safe; ``stats()`` returns an immutable snapshot.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+
+    def _hit(self) -> None:
+        with self._lock:
+            self._hits += 1
+
+    def _miss(self) -> None:
+        with self._lock:
+            self._misses += 1
+
+    def stats(self) -> ExecutorStats:
+        with self._lock:
+            return ExecutorStats(hits=self._hits, misses=self._misses)
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +252,7 @@ class BlockExecutor:
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
         self._cache_cap = max(0, int(cache_blocks))
         self._cache_lock = threading.Lock()
+        self._inflight: dict[int, threading.Event] = {}
         self._hits = 0
         self._misses = 0
         self._evictions = 0
@@ -235,28 +281,55 @@ class BlockExecutor:
     def num_blocks(self) -> int:
         return self.fetcher.num_blocks
 
-    def fetch(self, block_id: int) -> np.ndarray:
+    def fetch(self, block_id: int, *, counter: CallerStats | None = None) -> np.ndarray:
         """Cache-aware synchronous fetch of one block.  Returned arrays are
         marked read-only: blocks are shared (between the cache and every
         consumer), so an in-place write would silently corrupt later reads --
-        copy first to mutate."""
-        with self._cache_lock:
-            if block_id in self._cache:
-                self._cache.move_to_end(block_id)
-                self._hits += 1
-                return self._cache[block_id]
-        block = self.fetcher.fetch(block_id)
-        if isinstance(block, np.ndarray):
-            block.setflags(write=False)
-        with self._cache_lock:
-            self._misses += 1
-            if self._cache_cap > 0:
-                self._cache[block_id] = block
-                self._cache.move_to_end(block_id)
-                while len(self._cache) > self._cache_cap:
-                    self._cache.popitem(last=False)
-                    self._evictions += 1
-        return block
+        copy first to mutate.
+
+        Concurrent callers asking for the same uncached block are
+        single-flighted: one fetches, the rest wait and take the cache hit,
+        so contention never multiplies the I/O (cache-disabled executors skip
+        this -- there is nowhere to share the result from).  ``counter``
+        attributes the access to one caller (see :class:`CallerStats`).
+        """
+        while True:
+            with self._cache_lock:
+                if block_id in self._cache:
+                    self._cache.move_to_end(block_id)
+                    self._hits += 1
+                    if counter is not None:
+                        counter._hit()
+                    return self._cache[block_id]
+                event = self._inflight.get(block_id) if self._cache_cap > 0 else None
+                if event is None:
+                    if self._cache_cap > 0:
+                        self._inflight[block_id] = event = threading.Event()
+                    break  # this caller leads the fetch
+            # another caller is already fetching this block -- wait, then
+            # re-check the cache (a failed or instantly-evicted leader makes
+            # this caller lead the retry)
+            event.wait()
+        try:
+            block = self.fetcher.fetch(block_id)
+            if isinstance(block, np.ndarray):
+                block.setflags(write=False)
+            with self._cache_lock:
+                self._misses += 1
+                if counter is not None:
+                    counter._miss()
+                if self._cache_cap > 0:
+                    self._cache[block_id] = block
+                    self._cache.move_to_end(block_id)
+                    while len(self._cache) > self._cache_cap:
+                        self._cache.popitem(last=False)
+                        self._evictions += 1
+            return block
+        finally:
+            if event is not None:
+                with self._cache_lock:
+                    self._inflight.pop(block_id, None)
+                event.set()
 
     def stats(self) -> ExecutorStats:
         """Snapshot of the hit/miss/eviction counters (see
@@ -272,7 +345,11 @@ class BlockExecutor:
             self._hits = self._misses = self._evictions = 0
 
     def fetch_async(
-        self, block_id: int, fn: Callable[[np.ndarray], Any] | None = None
+        self,
+        block_id: int,
+        fn: Callable[[np.ndarray], Any] | None = None,
+        *,
+        counter: CallerStats | None = None,
     ) -> Future:
         """Start fetching ``block_id`` (and applying ``fn``) on a worker.
 
@@ -283,14 +360,19 @@ class BlockExecutor:
         if self._pool is None:
             fut: Future = Future()
             try:
-                fut.set_result(self._task(block_id, fn))
+                fut.set_result(self._task(block_id, fn, counter))
             except BaseException as e:  # noqa: BLE001 -- mirror executor semantics
                 fut.set_exception(e)
             return fut
-        return self._pool.submit(self._task, block_id, fn)
+        return self._pool.submit(self._task, block_id, fn, counter)
 
-    def _task(self, block_id: int, fn: Callable[[np.ndarray], Any] | None) -> Any:
-        block = self.fetch(block_id)
+    def _task(
+        self,
+        block_id: int,
+        fn: Callable[[np.ndarray], Any] | None,
+        counter: CallerStats | None = None,
+    ) -> Any:
+        block = self.fetch(block_id, counter=counter)
         return fn(block) if fn is not None else block
 
     # -- primitive 1: ordered map with prefetch ----------------------------
@@ -300,19 +382,21 @@ class BlockExecutor:
         ids: Iterable[int],
         *,
         with_ids: bool = False,
+        counter: CallerStats | None = None,
     ) -> Iterator[Any]:
         """Yield ``fn(block)`` for every id *in order*, prefetching ahead.
 
         ``fn`` runs on the worker threads (overlapping fetch and transform);
         ``fn=None`` yields the raw blocks.  ``with_ids=True`` yields
-        ``(block_id, result)`` pairs instead.
+        ``(block_id, result)`` pairs instead.  ``counter`` attributes every
+        access of this stream to one caller (see :class:`CallerStats`).
         """
         it = iter(ids)
         window: collections.deque[tuple[int, Future]] = collections.deque()
 
         def submit_one() -> None:
             for b in it:
-                window.append((b, self.fetch_async(b, fn)))
+                window.append((b, self.fetch_async(b, fn, counter=counter)))
                 return
 
         try:

@@ -48,11 +48,23 @@ import numpy as np
 from repro.core.estimators import quantile_from_histogram
 from repro.core.sampler import SamplingPolicy, UniformPolicy, WeightedPolicy
 from repro.kernels.block_sketch import BlockSketch, block_sketch
-from repro.rsp.engine import ExecutorStats
+from repro.rsp.engine import CallerStats, ExecutorStats
 
 KINDS = ("mean", "var", "sum", "count", "quantile", "histogram")
 _SKETCH_ONLY_KINDS = ("mean", "var", "sum", "count")
 _EPS = 1e-12
+
+
+def derive_seed(*components: int) -> int:
+    """Collapse integer identifiers (e.g. ``(service seed, query id)``) into
+    one seed whose RNG stream is independent of every other combination.
+
+    Concurrent serving needs this: two queries sharing one literal seed would
+    share bootstrap/selection streams, and deriving seeds from *submission
+    order* would make results depend on scheduling.  Deriving from stable ids
+    keeps every query reproducible regardless of interleaving.
+    """
+    return int(np.random.SeedSequence(list(components)).generate_state(1)[0])
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +193,12 @@ class Query:
     ``"auto"`` answers moment/label-count-only queries from the
     partition-time sketches when present, ``True`` forces it (error if the
     query needs block data), ``False`` always streams blocks.
+
+    ``seed`` drives block selection and the bootstrap; ``None`` (the
+    default) means "no seed pinned": direct execution falls back to 0, and
+    a :class:`~repro.serve.QueryService` replaces it with
+    :func:`derive_seed`\\ ``(service seed, query id)`` so every submitted
+    query gets an independent, schedule-invariant RNG stream.
     """
 
     aggregates: tuple[Aggregate, ...]
@@ -189,7 +207,7 @@ class Query:
     max_blocks: int | None = None
     min_blocks: int = 3
     policy: str | SamplingPolicy = "uniform"
-    seed: int = 0
+    seed: int | None = None
     bins: int = 128
     bootstrap: int = 200
     use_sketches: bool | str = "auto"
@@ -560,6 +578,11 @@ class QueryExecutor:
     def __init__(self, dataset, query: Query):
         self.ds = dataset
         self.q = query
+        self.seed = 0 if query.seed is None else int(query.seed)
+        # every access this query makes is attributed here (as well as to the
+        # executor's global counters) -- snapshot deltas of the shared
+        # executor would claim other queries' I/O the moment two interleave
+        self.counter = CallerStats()
         if any(a.by_label for a in query.aggregates) and dataset.num_classes is None:
             raise ValueError("by_label aggregates need num_classes on the dataset")
 
@@ -577,9 +600,7 @@ class QueryExecutor:
 
         # forcing this path on a sketch-less dataset computes the sketches
         # (a full-corpus pass through the executor) -- meter it honestly
-        executor = self.ds.executor
-        stats0 = executor.stats()
-        summaries = self.ds.summaries
+        summaries = self._materialized_summaries()
         stats = combine_summaries(summaries)
         out = []
         for a in self.q.aggregates:
@@ -607,14 +628,21 @@ class QueryExecutor:
             target_rel_err=self.q.target_rel_err,
             converged=True,
             from_sketches=True,
-            executor_stats=executor.stats() - stats0,
+            executor_stats=self.counter.stats(),
         )
+
+    def _materialized_summaries(self):
+        """``ds.summaries``, with a lazy full-corpus sketch pass attributed
+        to this query's counter (it is this query's I/O)."""
+        if not self.ds.has_summaries:
+            self.ds._summaries = self.ds._compute_summaries(counter=self.counter)
+        return self.ds.summaries
 
     # -- progressive path --------------------------------------------------
     def _grid(self) -> tuple[np.ndarray, np.ndarray]:
         """Per-feature histogram grid from the partition-time sketches'
         global extrema (the only pre-read range information there is)."""
-        summaries = self.ds.summaries
+        summaries = self._materialized_summaries()
         lo = np.min([s.min for s in summaries], axis=0).astype(np.float64)
         hi = np.max([s.max for s in summaries], axis=0).astype(np.float64)
         pad = np.maximum(1e-9, 1e-9 * (hi - lo))
@@ -628,7 +656,7 @@ class QueryExecutor:
             uniform=isinstance(self._pol, UniformPolicy),
             num_classes=self.ds.num_classes,
             bootstrap=self.q.bootstrap,
-            seed=self.q.seed,
+            seed=self.seed,
         )
         lo = hi = None
         if needs_hist:
@@ -694,12 +722,12 @@ class QueryExecutor:
             return
 
         executor = self.ds.executor
-        # snapshot BEFORE resolving the policy or building states: sketch
-        # probabilities (weighted/stratified) and the histogram grid both
-        # come from ds.summaries, which on a sketch-less dataset reads every
-        # block -- those passes belong in the query's honest I/O count
-        stats0 = executor.stats()
-        self._pol = self.ds.policy(q.policy, seed=q.seed)
+        # sketch probabilities (weighted/stratified) and the histogram grid
+        # both come from ds.summaries, which on a sketch-less dataset reads
+        # every block -- those passes belong in this query's honest I/O count
+        if isinstance(q.policy, str) and q.policy != "uniform":
+            self._materialized_summaries()
+        self._pol = self.ds.policy(q.policy, seed=self.seed)
         uniform = isinstance(self._pol, UniformPolicy)
         K = self.ds.num_blocks
         max_blocks = q.max_blocks if q.max_blocks is not None else K
@@ -717,7 +745,9 @@ class QueryExecutor:
                 yield self._pol.sample(1)[0]
 
         b = 0
-        for bid, block in executor.map_blocks(None, gen_ids(), with_ids=True):
+        for bid, block in executor.map_blocks(
+            None, gen_ids(), with_ids=True, counter=self.counter
+        ):
             weight = None
             if isinstance(self._pol, WeightedPolicy):
                 weight = float(self._pol.weights([bid])[0])
@@ -747,7 +777,7 @@ class QueryExecutor:
                 target_rel_err=q.target_rel_err,
                 converged=converged,
                 from_sketches=False,
-                executor_stats=executor.stats() - stats0,
+                executor_stats=self.counter.stats(),
             )
             if converged:
                 return

@@ -1,3 +1,26 @@
+"""``repro.serve`` -- serving layers.
+
+Two independent serving surfaces live here:
+
+* :mod:`repro.serve.query_service` -- concurrent multi-tenant approximate
+  *query* serving over one ``RSPDataset`` (admission control, deadline-aware
+  step scheduling, anytime responses).  Entry point: ``ds.serve()``.
+* :mod:`repro.serve.engine` -- batched *model* serving (prefill + KV-cache
+  decode, RSP block-ensemble logit averaging).
+"""
+
+from repro.serve.admission import (
+    AdmissionController,
+    AdmissionRejected,
+    AdmissionSnapshot,
+)
 from repro.serve.engine import EnsembleServer, ServeConfig, Server
+from repro.serve.query_service import (
+    OUTCOMES,
+    QueryService,
+    QueryTicket,
+    ServiceMetrics,
+)
+from repro.serve.scheduler import StepScheduler
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -27,6 +27,15 @@ def test_quickstart_runs():
 
 
 @pytest.mark.slow
+def test_serve_queries_runs():
+    proc = _run("serve_queries.py")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "outcome=deadline" in proc.stdout
+    assert "anytime CI covers the full-scan mean: True" in proc.stdout
+    assert "saturated service rejected the second tenant" in proc.stdout
+
+
+@pytest.mark.slow
 def test_train_lm_rsp_preempt_restart():
     proc = _run("train_lm_rsp.py", "--steps", "10", "--preempt-at", "5")
     assert proc.returncode == 0, proc.stderr[-2000:]
