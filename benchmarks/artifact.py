@@ -21,25 +21,33 @@ def default_out_dir() -> str:
 
 def write_artifact(
     suite: str,
-    rows: list[tuple[str, float, str]],
+    rows: list[tuple],
     *,
     extra: dict | None = None,
     out_dir: str | None = None,
 ) -> str:
     """Write ``BENCH_<suite>.json`` and return its path.
 
-    ``rows`` are the harness rows ``(name, value, derived)``; ``extra``
+    ``rows`` are the harness rows ``(name, value, derived)`` with an
+    optional fourth element: a dict of structured metrics (e.g.
+    ``{"rows_per_s": ..., "autotune": {...}}``) recorded on the row as
+    ``"metrics"`` -- throughput and winning autotuner configs live there so
+    regression tooling never has to parse ``derived`` strings.  ``extra``
     merges additional top-level keys (e.g. gate outcomes) into the payload.
     """
     out_dir = out_dir or default_out_dir()
     os.makedirs(out_dir, exist_ok=True)
+    records = []
+    for row in rows:
+        name, value, derived = row[0], row[1], row[2]
+        rec: dict = {"name": name, "value": float(value), "derived": derived}
+        if len(row) > 3 and row[3]:
+            rec["metrics"] = dict(row[3])
+        records.append(rec)
     payload: dict = {
         "suite": suite,
         "generated_unix": time.time(),
-        "rows": [
-            {"name": name, "value": float(value), "derived": derived}
-            for name, value, derived in rows
-        ],
+        "rows": records,
     }
     if extra:
         payload.update(extra)

@@ -67,9 +67,9 @@ def bench_sketch_path(ds, repeats: int = 20) -> tuple[float, int]:
 
 def bench_progressive_quantile(
     ds_path: str, *, target: float = 0.01, seed: int = 0
-) -> tuple[int, int, float]:
-    """(blocks_read, total_blocks, speedup_vs_full_scan) for a p50 query at
-    ``target`` relative error on a store-backed dataset."""
+) -> tuple[int, int, float, float]:
+    """(blocks_read, total_blocks, speedup_vs_full_scan, rows_per_s) for a
+    p50 query at ``target`` relative error on a store-backed dataset."""
     ds = rsp.open(ds_path, cache_blocks=0)
     t0 = time.perf_counter()
     res = ds.query(
@@ -77,13 +77,14 @@ def bench_progressive_quantile(
     )
     t_query = time.perf_counter() - t0
     assert res.executor_stats.blocks_fetched >= res.blocks_read  # honest I/O count
+    rows_per_s = res.executor_stats.rows_fetched / max(t_query, 1e-9)
     t0 = time.perf_counter()
     full = rsp.open(ds_path, cache_blocks=0)
     full.query("median", use_sketches=False, target_rel_err=None, seed=seed)
     t_full = time.perf_counter() - t0
     ds.close()
     full.close()
-    return res.blocks_read, res.total_blocks, t_full / max(t_query, 1e-9)
+    return res.blocks_read, res.total_blocks, t_full / max(t_query, 1e-9), rows_per_s
 
 
 def bench_fused_sketch(block: np.ndarray, *, bins: int = 128, repeats: int = 10):
@@ -105,31 +106,38 @@ def bench_fused_sketch(block: np.ndarray, *, bins: int = 128, repeats: int = 10)
     return fused, two_pass
 
 
-def query_rows(smoke: bool = False) -> list[tuple[str, float, str]]:
-    """``benchmarks.run``-style rows: (name, value, derived)."""
+def query_rows(smoke: bool = False) -> list[tuple]:
+    """``benchmarks.run``-style rows ``(name, value, derived, metrics)``
+    with per-row rows/s throughput in the metrics dict."""
     if smoke:
         # block_records must divide by num_blocks (Algorithm 1's delta slices)
         kw = dict(num_blocks=48, block_records=2304, features=8)
     else:
         kw = dict(num_blocks=96, block_records=9216, features=16)
-    rows: list[tuple[str, float, str]] = []
+    rows: list[tuple] = []
     ds, _ = _build(**kw)
 
     us, fetched = bench_sketch_path(ds)
     rows.append(
-        ("query_sketch_only", us, f"us_per_query={us:.0f} blocks_fetched={fetched}")
+        (
+            "query_sketch_only",
+            us,
+            f"us_per_query={us:.0f} blocks_fetched={fetched}",
+            {"rows_per_s": 0.0, "queries_per_s": 1e6 / max(us, 1e-9)},
+        )
     )
 
     with tempfile.TemporaryDirectory() as tmp:
         path = os.path.join(tmp, "corpus.rsp")
         ds.save(path)
-        read, total, speedup = bench_progressive_quantile(path)
+        read, total, speedup, rows_per_s = bench_progressive_quantile(path)
         rows.append(
             (
                 "query_progressive_p50",
                 read,
                 f"blocks={read}/{total} frac={read / total:.2f}"
-                f" speedup_vs_full={speedup:.1f}x",
+                f" speedup_vs_full={speedup:.1f}x rows_per_s={rows_per_s:,.0f}",
+                {"rows_per_s": rows_per_s},
             )
         )
     block = np.asarray(ds.block(0))
@@ -141,6 +149,7 @@ def query_rows(smoke: bool = False) -> list[tuple[str, float, str]]:
             fused,
             f"records_per_s={fused:,.0f} two_pass={two_pass:,.0f}"
             f" ratio={fused / max(two_pass, 1e-9):.2f}x",
+            {"rows_per_s": fused, "two_pass_rows_per_s": two_pass},
         )
     )
     return rows
@@ -153,11 +162,11 @@ def main() -> None:
 
     rows = query_rows(smoke=args.smoke)
     print("name,value,derived")
-    for name, value, derived in rows:
-        print(f"{name},{value:.1f},{derived}")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
 
     if args.smoke:
-        by_name = {name: derived for name, _, derived in rows}
+        by_name = {row[0]: row[2] for row in rows}
         ok = True
         fetched = int(by_name["query_sketch_only"].split("blocks_fetched=")[1])
         if fetched != 0:

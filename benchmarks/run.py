@@ -83,13 +83,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = False
     for suite in which:
-        rows: list[tuple[str, float, str]] = []
+        rows: list[tuple] = []
         errors = 0
         for fn in SUITES[suite]:
             try:
-                for name, us, derived in fn():
+                for row in fn():
+                    name, us, derived = row[0], row[1], row[2]
                     print(f"{name},{us:.1f},{derived}")
-                    rows.append((name, us, derived))
+                    rows.append(row)
             except Exception:
                 failed = True
                 errors += 1

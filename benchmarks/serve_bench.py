@@ -209,19 +209,29 @@ def serve_bench(smoke: bool = False):
         t.outcome in ("converged", "exhausted") for t, _ in by_cls["converged"]
     ) / counts["converged"]
 
+    fetched_rows_per_s = metrics.executor.rows_fetched / max(wall_s, 1e-9)
+    scanned_rows_per_s = (
+        metrics.executor.accesses * shape["block_records"] / max(wall_s, 1e-9)
+    )
     rows = [
         (
             "serve_throughput",
             metrics.qps,
             f"queries={metrics.submitted} progressive={progressive}"
             f" wall_s={wall_s:.2f} p50_ms={metrics.latency_p50_ms:.1f}"
-            f" p99_ms={metrics.latency_p99_ms:.1f}",
+            f" p99_ms={metrics.latency_p99_ms:.1f}"
+            f" rows_per_s={scanned_rows_per_s:,.0f}",
+            # scanned = every block pass (cache hits included); fetched =
+            # rows that actually crossed the fetcher (cache misses)
+            {"rows_per_s": scanned_rows_per_s,
+             "fetched_rows_per_s": fetched_rows_per_s},
         ),
         (
             "serve_cache_sharing",
             shared_rate,
             f"shared={shared_rate:.3f} isolated={isolated_rate:.3f}"
             f" hits={metrics.executor.hits} misses={metrics.executor.misses}",
+            {"rows_fetched": metrics.executor.rows_fetched},
         ),
         (
             "serve_sketch_fast_path",
@@ -262,8 +272,8 @@ def serve_bench(smoke: bool = False):
     return rows, gates
 
 
-def serve_rows(smoke: bool = False) -> list[tuple[str, float, str]]:
-    """``benchmarks.run``-style rows: (name, value, derived)."""
+def serve_rows(smoke: bool = False) -> list[tuple]:
+    """``benchmarks.run``-style rows ``(name, value, derived[, metrics])``."""
     return serve_bench(smoke=smoke)[0]
 
 
@@ -307,8 +317,8 @@ def main() -> None:
 
     rows, gates = serve_bench(smoke=args.smoke)
     print("name,value,derived")
-    for name, value, derived in rows:
-        print(f"{name},{value:.1f},{derived}")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
     path = write_artifact("serve", rows, extra={"gates": gates, "smoke": args.smoke})
     print(f"wrote {path}")
 

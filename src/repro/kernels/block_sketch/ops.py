@@ -11,24 +11,33 @@ bins, moving a downstream quantile by at most one bin width):
 * ``impl="pallas"`` -- the tiled TPU kernel (interpret=True off-TPU), moments
   folded Chan-style across row tiles in VMEM.
 
-``impl="auto"`` picks the numpy oracle on CPU hosts (XLA's scatter-add
-histogram lowers poorly there) and the jit'd jax path on accelerators,
-mirroring the partition backend registry's capability-predicate style.  All
-paths return the numpy :class:`~repro.kernels.block_sketch.ref.BlockSketch`.
+``impl="auto"`` consults the shared measured autotuner
+(:mod:`repro.kernels.autotune`): the first call at a shape benchmarks the
+candidate (impl, tile) grid and persists the winner; with
+``REPRO_AUTOTUNE=off`` it pins the deterministic default (numpy oracle on
+CPU hosts -- XLA's scatter-add histogram lowers poorly there -- and the
+jit'd jax path on accelerators).  All paths return the numpy
+:class:`~repro.kernels.block_sketch.ref.BlockSketch`.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune
+from repro.kernels.autotune import Candidate
 from repro.kernels.block_sketch.kernel import block_sketch_pallas
 from repro.kernels.block_sketch.ref import BlockSketch, _grid, block_sketch_ref
 
 IMPLS = ("auto", "ref", "jax", "pallas")
+
+PALLAS_TILES = (128, 256, 512, 1024)
+DEFAULT_TILE = 128  # legacy hardcoded tile; now only the explicit-impl fallback
 
 
 @functools.partial(jax.jit, static_argnames=("bins",))
@@ -60,6 +69,34 @@ def _inv_width(lo: np.ndarray, hi: np.ndarray, bins: int) -> np.ndarray:
     return np.where(width > 0, 1.0 / np.where(width > 0, width, 1.0), 0.0)
 
 
+def _auto_config(block, *, bins, lo, hi, interpret) -> Candidate:
+    """Tuner-backed (impl, tile) choice for this block's shape bucket."""
+    dev = jax.default_backend()
+    default = Candidate("ref") if dev == "cpu" else Candidate("jax")
+    shape = np.shape(block)
+    n = int(shape[0]) if shape else 0
+    f = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    cands = [Candidate("ref"), Candidate("jax")]
+    if bins >= 1:
+        on_tpu = dev == "tpu"
+        # off-TPU the Pallas kernel runs interpreted; flagged so the tuner
+        # never crowns a config from interpret-mode timings
+        cands += [Candidate("pallas", t, interpreted=not on_tpu) for t in PALLAS_TILES]
+
+    def measure(c: Candidate) -> float:
+        run = lambda: block_sketch(  # noqa: E731
+            block, bins=bins, lo=lo, hi=hi, impl=c.impl,
+            tile_rows=c.tile_rows, interpret=interpret,
+        )
+        run()  # warm (jit compile / first-touch) outside the timer
+        t0 = time.perf_counter()
+        run()
+        return time.perf_counter() - t0
+
+    key = autotune.shape_key(n, f) + f"|b{bins}"
+    return autotune.choose("block_sketch", key, cands, measure, default=default)
+
+
 def block_sketch(
     block,
     *,
@@ -67,7 +104,7 @@ def block_sketch(
     lo=0.0,
     hi=1.0,
     impl: str = "auto",
-    tile_rows: int = 128,
+    tile_rows: int | None = None,
     interpret: bool = True,
 ) -> BlockSketch:
     """Fused sketch of one block (any shape ``[n, ...]``; features flatten).
@@ -75,11 +112,18 @@ def block_sketch(
     ``bins=0`` skips the histogram (moments-only fast path; ref/jax only --
     the Pallas kernel always produces a histogram, so ``impl="pallas"`` needs
     ``bins >= 1``).  ``lo`` / ``hi`` are scalars or per-feature arrays.
+    ``impl="auto"`` routes through the measured autotuner; an explicit
+    ``tile_rows`` pins the Pallas tile.
     """
     if impl not in IMPLS:
         raise ValueError(f"unknown impl {impl!r} (one of {IMPLS})")
     if impl == "auto":
-        impl = "ref" if jax.default_backend() == "cpu" else "jax"
+        cfg = _auto_config(block, bins=bins, lo=lo, hi=hi, interpret=interpret)
+        impl = cfg.impl
+        if tile_rows is None:
+            tile_rows = cfg.tile_rows
+    if tile_rows is None:
+        tile_rows = DEFAULT_TILE
     if impl == "ref":
         return block_sketch_ref(block, bins=bins, lo=lo, hi=hi)
     x = np.asarray(block, dtype=np.float32).reshape(np.shape(block)[0], -1)

@@ -1,0 +1,33 @@
+"""Plan-compiled fused query kernels: predicate filter + column projection
++ grouped Chan-moment/histogram sketch in one data pass, compiled per
+:class:`QueryPlan` and dispatched through the shared tile autotuner."""
+
+from repro.kernels.plan.ops import (
+    IMPLS,
+    cache_clear,
+    cache_info,
+    compile_plan,
+    plan_sketch,
+)
+from repro.kernels.plan.plan import (
+    Predicate,
+    QueryPlan,
+    as_predicates,
+    parse_predicate,
+)
+from repro.kernels.plan.ref import PlanResult, empty_sketch, plan_sketch_ref
+
+__all__ = [
+    "IMPLS",
+    "PlanResult",
+    "Predicate",
+    "QueryPlan",
+    "as_predicates",
+    "cache_clear",
+    "cache_info",
+    "compile_plan",
+    "empty_sketch",
+    "parse_predicate",
+    "plan_sketch",
+    "plan_sketch_ref",
+]

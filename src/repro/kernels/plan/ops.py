@@ -1,0 +1,427 @@
+"""Plan-compiled fused query kernels: compile cache + impl dispatcher.
+
+``plan_sketch(block, plan, ...)`` runs one :class:`~repro.kernels.plan.plan.
+QueryPlan` (predicates + projection + optional group-by) over one block in a
+single data pass and returns a :class:`~repro.kernels.plan.ref.PlanResult`.
+Four equivalent implementations (1e-5 moment parity; histograms carry the
+standing bin-edge caveat):
+
+* ``impl="ref"``    -- mask-then-sketch numpy oracle (two passes; the
+  baseline the fused paths are benchmarked against).
+* ``impl="np"``     -- cache-blocked fused numpy: each row tile is masked,
+  projected, moment-folded (f64 accumulators) and histogrammed while hot in
+  cache; the fastest CPU path.
+* ``impl="jax"``    -- one jit'd fused pass (masked reductions + scatter
+  histogram); the accelerator path.
+* ``impl="pallas"`` -- the row-tiled TPU kernel (``plan.kernel``): rows
+  failing a predicate are masked inside the same VMEM pass as the Chan
+  moment fold and histogram scatter.
+
+Kernels are **compiled per plan**: :func:`compile_plan` closes over the
+plan's predicates/columns/groups as constants and memoizes on
+``(plan.key(), features, bins, impl, tile)`` -- re-running a plan hits the
+cache, changing any predicate misses.  ``impl="auto"`` consults the shared
+measured autotuner (:mod:`repro.kernels.autotune`) for the winning
+(impl, tile) on this machine; with ``REPRO_AUTOTUNE=off`` it pins the
+deterministic default (fused numpy @ ``16384`` rows on CPU, jax on
+accelerators).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.kernels import autotune
+from repro.kernels.autotune import Candidate
+from repro.kernels.block_sketch.ops import _inv_width
+from repro.kernels.block_sketch.ref import BlockSketch, _grid
+from repro.kernels.plan.plan import QueryPlan
+from repro.kernels.plan.ref import PlanResult, plan_sketch_ref
+
+IMPLS = ("auto", "ref", "np", "jax", "pallas")
+
+NP_TILES = (8192, 16384, 32768, 65536)
+PALLAS_TILES = (128, 256, 512, 1024)
+DEFAULT_NP_TILE = 16384  # the pinned REPRO_AUTOTUNE=off choice on CPU
+
+_CACHE: dict[tuple, Callable] = {}
+_CACHE_LOCK = threading.Lock()
+_HITS = 0
+_MISSES = 0
+
+
+def cache_info() -> dict:
+    """Compile-cache counters: ``hits`` / ``misses`` / ``size``."""
+    with _CACHE_LOCK:
+        return {"hits": _HITS, "misses": _MISSES, "size": len(_CACHE)}
+
+
+def cache_clear() -> None:
+    global _HITS, _MISSES
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _HITS = _MISSES = 0
+
+
+# ---------------------------------------------------------------------------
+# Implementations (each factory returns run(x32, glo, ghi) -> PlanResult)
+# ---------------------------------------------------------------------------
+
+def _result(plan, fp, bins, glo, ghi, *, nsel, n, cnt, mean, m2, mn, mx, hist):
+    """Assemble numpy per-group stats into a PlanResult."""
+    sketches = []
+    for g in range(plan.groups):
+        sketches.append(
+            BlockSketch(
+                count=float(cnt[g]),
+                mean=np.asarray(mean[g], np.float64),
+                m2=np.maximum(np.asarray(m2[g], np.float64), 0.0),
+                min=np.asarray(mn[g], np.float64),
+                max=np.asarray(mx[g], np.float64),
+                hist=None if bins == 0 else np.asarray(hist[g], np.int64),
+                lo=glo,
+                hi=ghi,
+            )
+        )
+    return PlanResult(rows_total=int(n), rows_selected=int(nsel), sketches=sketches)
+
+
+def _build_ref(plan, f, bins):
+    def run(x, glo, ghi):
+        lo = 0.0 if glo is None else glo
+        hi = 1.0 if ghi is None else ghi
+        return plan_sketch_ref(x, plan, bins=bins, lo=lo, hi=hi)
+
+    return run
+
+
+_MINMAX_CHUNK = 32
+
+
+def _minmax_into(a: np.ndarray, mn: np.ndarray, mx: np.ndarray) -> None:
+    """Fold columnwise min/max of contiguous ``a`` [k, F] into ``mn``/``mx``.
+
+    numpy's axis-0 reduction over a narrow [k, F] array runs near scalar
+    speed; reshaping ``_MINMAX_CHUNK`` rows into one wide row first makes
+    the inner reduction SIMD-wide (~12x on 8-feature blocks)."""
+    k, f = a.shape
+    body = (k // _MINMAX_CHUNK) * _MINMAX_CHUNK
+    if body:
+        wide = a[:body].reshape(-1, _MINMAX_CHUNK * f)
+        np.minimum(mn, wide.min(0).reshape(_MINMAX_CHUNK, f).min(0), out=mn)
+        np.maximum(mx, wide.max(0).reshape(_MINMAX_CHUNK, f).max(0), out=mx)
+    if body < k:
+        np.minimum(mn, a[body:].min(0), out=mn)
+        np.maximum(mx, a[body:].max(0), out=mx)
+
+
+def _build_np(plan, f, bins, tile_rows):
+    """Cache-blocked fused numpy path.  Per row tile: predicate mask ->
+    ``take`` the survivors -> float32 moment/extrema/histogram work while
+    the tile is cache-resident, folded into float64 accumulators across
+    tiles (one pass over the block, versus the baseline's mask pass + f64
+    per-group sketch passes)."""
+    cols = plan.resolve_columns(f)
+    project = cols != tuple(range(f))
+    cols_arr = np.asarray(cols, np.intp)
+    fp = len(cols)
+    G = plan.groups
+    gcol = None if plan.group_by is None else plan.group_by % f
+    preds = plan.predicates
+    offs32 = np.arange(fp, dtype=np.int32) * bins
+
+    def run(x, glo, ghi):
+        n = x.shape[0]
+        cnt = np.zeros(G)
+        s = np.zeros((G, fp))
+        ss = np.zeros((G, fp))
+        mn = np.full((G, fp), np.inf, np.float32)
+        mx = np.full((G, fp), -np.inf, np.float32)
+        hist = np.zeros(G * fp * bins, np.int64) if bins else None
+        if bins:
+            lo32 = glo.astype(np.float32)
+            invw32 = _inv_width(glo, ghi, bins).astype(np.float32)
+        nsel = 0
+        for start in range(0, n, tile_rows):
+            t = x[start : start + tile_rows]
+            if preds:
+                m = preds[0].mask(t)
+                for p in preds[1:]:
+                    m &= p.mask(t)
+                idxs = np.flatnonzero(m)
+                if idxs.shape[0] == 0:
+                    continue
+                sel = np.take(t, idxs, axis=0)
+            else:
+                sel = np.ascontiguousarray(t)
+            nsel += sel.shape[0]
+            if gcol is not None:
+                lab = sel[:, gcol].astype(np.int32)
+                ok = (lab >= 0) & (lab < G)
+                if not ok.all():
+                    sel = sel[ok]
+                    lab = lab[ok]
+                    if sel.shape[0] == 0:
+                        continue
+            selp = np.take(sel, cols_arr, axis=1) if project else sel
+            sq = selp * selp
+            if G == 1:
+                cnt[0] += selp.shape[0]
+                s[0] += selp.sum(0)   # f32 pairwise per tile, f64 across tiles
+                ss[0] += sq.sum(0)
+                _minmax_into(selp, mn[0], mx[0])
+            else:
+                for g in range(G):
+                    gi = np.flatnonzero(lab == g)
+                    if gi.shape[0] == 0:
+                        continue
+                    sub = np.take(selp, gi, axis=0)
+                    cnt[g] += sub.shape[0]
+                    s[g] += sub.sum(0)
+                    ss[g] += np.take(sq, gi, axis=0).sum(0)
+                    _minmax_into(sub, mn[g], mx[g])
+            if bins:
+                w = selp - lo32
+                w *= invw32
+                idx = w.astype(np.int32)  # truncation == floor: clip handles < 0
+                np.clip(idx, 0, bins - 1, out=idx)
+                idx += offs32
+                if G > 1:
+                    idx += (lab * np.int32(fp * bins))[:, None]
+                hist += np.bincount(idx.ravel(), minlength=G * fp * bins)
+        mean = s / np.maximum(cnt, 1.0)[:, None]
+        m2 = np.maximum(ss - cnt[:, None] * mean**2, 0.0)
+        return _result(
+            plan, fp, bins, glo, ghi, nsel=nsel, n=n, cnt=cnt, mean=mean, m2=m2,
+            mn=mn, mx=mx, hist=None if bins == 0 else hist.reshape(G, fp, bins),
+        )
+
+    return run
+
+
+def _build_jax(plan, f, bins):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.plan.kernel import _JNP_OPS
+
+    cols = plan.resolve_columns(f)
+    project = cols != tuple(range(f))
+    cols_arr = np.asarray(cols, np.int32)
+    fp = len(cols)
+    G = plan.groups
+    gcol = None if plan.group_by is None else plan.group_by % f
+
+    @jax.jit
+    def fused(x, lo, invw):
+        x = x.astype(jnp.float32)
+        m = jnp.ones((x.shape[0],), bool)
+        for p in plan.predicates:
+            m = jnp.logical_and(m, _JNP_OPS[p.op](x[:, p.column], jnp.float32(p.value)))
+        nsel = m.astype(jnp.float32).sum()
+        xp = x[:, cols_arr] if project else x
+        lab = None if gcol is None else x[:, gcol].astype(jnp.int32)
+        outs = []
+        for g in range(G):
+            mg = m if lab is None else jnp.logical_and(m, lab == g)
+            w = mg.astype(jnp.float32)
+            cnt = w.sum()
+            safe = jnp.maximum(cnt, 1.0)
+            mean = (w @ xp) / safe
+            m2 = w @ jnp.square(xp - mean)
+            mn = jnp.where(mg[:, None], xp, jnp.inf).min(axis=0)
+            mx = jnp.where(mg[:, None], xp, -jnp.inf).max(axis=0)
+            if bins:
+                idx = jnp.clip(
+                    jnp.floor((xp - lo) * invw).astype(jnp.int32), 0, bins - 1
+                )
+                flat = idx + jnp.arange(fp, dtype=jnp.int32) * bins
+                hist = (
+                    jnp.zeros((fp * bins,), jnp.float32)
+                    .at[flat.ravel()]
+                    .add(jnp.repeat(w, fp))
+                    .reshape(fp, bins)
+                )
+            else:
+                hist = jnp.zeros((fp, 0), jnp.float32)
+            outs.append((cnt, mean, m2, mn, mx, hist))
+        cnts, means, m2s, mns, mxs, hists = (jnp.stack(v) for v in zip(*outs))
+        return nsel, cnts, means, m2s, mns, mxs, hists
+
+    def run(x, glo, ghi):
+        import jax.numpy as jnp
+
+        lo = np.zeros(fp) if glo is None else glo
+        invw = np.zeros(fp) if bins == 0 else _inv_width(glo, ghi, bins)
+        nsel, cnt, mean, m2, mn, mx, hist = fused(
+            jnp.asarray(x), jnp.asarray(lo, jnp.float32), jnp.asarray(invw, jnp.float32)
+        )
+        return _result(
+            plan, fp, bins, glo, ghi, nsel=float(nsel), n=x.shape[0],
+            cnt=np.asarray(cnt, np.float64), mean=np.asarray(mean, np.float64),
+            m2=np.asarray(m2, np.float64), mn=np.asarray(mn, np.float64),
+            mx=np.asarray(mx, np.float64),
+            hist=None if bins == 0 else np.rint(np.asarray(hist)).astype(np.int64),
+        )
+
+    return run
+
+
+def _build_pallas(plan, f, bins, tile_rows, interpret):
+    import jax.numpy as jnp
+
+    from repro.kernels.plan.kernel import plan_sketch_pallas
+
+    cols = plan.resolve_columns(f)
+    fp = len(cols)
+    G = plan.groups
+
+    def run(x, glo, ghi):
+        stats, hist, nsel = plan_sketch_pallas(
+            jnp.asarray(x),
+            jnp.asarray(glo),
+            jnp.asarray(_inv_width(glo, ghi, bins)),
+            plan=plan,
+            bins=bins,
+            tile_rows=tile_rows,
+            interpret=interpret,
+        )
+        stats = np.asarray(stats, np.float64).reshape(G, 5, fp)
+        hist = np.rint(np.asarray(hist, np.float64)).astype(np.int64)
+        return _result(
+            plan, fp, bins, glo, ghi, nsel=float(np.asarray(nsel)[0, 0]),
+            n=x.shape[0], cnt=stats[:, 0, 0], mean=stats[:, 1], m2=stats[:, 2],
+            mn=stats[:, 3], mx=stats[:, 4], hist=hist.reshape(G, fp, bins),
+        )
+
+    return run
+
+
+def compile_plan(
+    plan: QueryPlan,
+    *,
+    num_features: int,
+    bins: int = 0,
+    impl: str = "np",
+    tile_rows: int | None = None,
+    interpret: bool = True,
+) -> Callable:
+    """The compiled executor ``run(x32, glo, ghi) -> PlanResult`` for
+    ``plan`` at this shape, memoized on ``(plan.key(), features, bins,
+    impl, tile)`` -- the plan-keyed compile cache."""
+    global _HITS, _MISSES
+    if impl not in IMPLS or impl == "auto":
+        raise ValueError(f"compile_plan impl must be concrete, got {impl!r}")
+    if impl in ("np", "pallas") and tile_rows is None:
+        tile_rows = DEFAULT_NP_TILE if impl == "np" else PALLAS_TILES[0]
+    key = (plan.key(), int(num_features), int(bins), impl, tile_rows, bool(interpret))
+    with _CACHE_LOCK:
+        fn = _CACHE.get(key)
+        if fn is not None:
+            _HITS += 1
+            return fn
+    if impl == "ref":
+        fn = _build_ref(plan, num_features, bins)
+    elif impl == "np":
+        fn = _build_np(plan, num_features, bins, tile_rows)
+    elif impl == "jax":
+        fn = _build_jax(plan, num_features, bins)
+    else:
+        fn = _build_pallas(plan, num_features, bins, tile_rows, interpret)
+    with _CACHE_LOCK:
+        fn = _CACHE.setdefault(key, fn)
+        _MISSES += 1
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Autotuned dispatch
+# ---------------------------------------------------------------------------
+
+def _default_candidate() -> Candidate:
+    import jax
+
+    if jax.default_backend() == "cpu":
+        return Candidate("np", DEFAULT_NP_TILE)
+    return Candidate("jax")
+
+
+def _auto_config(plan, x, glo, ghi, *, bins, interpret) -> Candidate:
+    import jax
+
+    n, f = x.shape
+    dev = jax.default_backend()
+    on_tpu = dev == "tpu"
+    cands = [Candidate("np", t) for t in NP_TILES]
+    cands.append(Candidate("ref"))
+    if dev != "cpu":
+        cands.append(Candidate("jax"))
+    if bins >= 1:
+        # off-TPU these run the Pallas interpreter; flagged so the tuner
+        # never crowns a config from interpret-mode timings
+        cands += [
+            Candidate("pallas", t, interpreted=not on_tpu) for t in PALLAS_TILES
+        ]
+    key = autotune.shape_key(n, f) + f"|g{plan.groups}p{len(plan.predicates)}c{len(plan.resolve_columns(f))}b{bins}"
+
+    def measure(c: Candidate) -> float:
+        fn = compile_plan(
+            plan, num_features=f, bins=bins, impl=c.impl, tile_rows=c.tile_rows,
+            interpret=interpret and not on_tpu,
+        )
+        fn(x, glo, ghi)  # warm (jit compile / first-touch) outside the timer
+        t0 = time.perf_counter()
+        fn(x, glo, ghi)
+        return time.perf_counter() - t0
+
+    return autotune.choose(
+        "plan_sketch", key, cands, measure, default=_default_candidate()
+    )
+
+
+def plan_sketch(
+    block,
+    plan: QueryPlan,
+    *,
+    bins: int = 0,
+    lo=0.0,
+    hi=1.0,
+    impl: str = "auto",
+    tile_rows: int | None = None,
+    interpret: bool = True,
+) -> PlanResult:
+    """Execute ``plan`` over one block (any ``[n, ...]`` shape; features
+    flatten) in a single fused pass.
+
+    ``bins=0`` skips histograms (``impl="pallas"`` then falls back to the
+    jit path, as its kernel always histograms).  ``lo`` / ``hi`` are
+    scalars or arrays over the *projected* features.  ``impl="auto"``
+    routes through the measured autotuner; an explicit ``tile_rows`` pins
+    the tile for the tiled impls.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r} (one of {IMPLS})")
+    x = np.asarray(block, dtype=np.float32).reshape(np.shape(block)[0], -1)
+    n, f = x.shape
+    fp = len(plan.resolve_columns(f))
+    glo = ghi = None
+    if bins > 0:
+        glo, ghi = _grid(lo, hi, fp)
+    if impl == "pallas" and bins == 0:
+        impl = "jax"
+    if impl == "auto":
+        cfg = _auto_config(plan, x, glo, ghi, bins=bins, interpret=interpret)
+        impl = cfg.impl
+        if tile_rows is None:
+            tile_rows = cfg.tile_rows
+        if impl == "pallas" and bins == 0:
+            impl = "jax"
+    fn = compile_plan(
+        plan, num_features=f, bins=bins, impl=impl, tile_rows=tile_rows,
+        interpret=interpret,
+    )
+    return fn(x, glo, ghi)

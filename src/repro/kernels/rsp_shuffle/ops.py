@@ -1,15 +1,27 @@
 """jit'd wrapper: generate the hierarchical permutation from a PRNG key and
 apply the kernel.  ``rsp_randomize_block`` is the on-device realization of
-Algorithm 1's per-block randomize step."""
+Algorithm 1's per-block randomize step.
+
+``tile_rows=None`` (the default) asks the shared autotuner for the fastest
+tile among the divisors of ``R``; passing an explicit tile pins it -- the
+partition backends do exactly that (``tile_rows=delta``) because the tile
+*is* part of the permutation's definition there, and retuning would change
+which rows land in which RSP block."""
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
+from repro.kernels.autotune import Candidate
 from repro.kernels.rsp_shuffle.kernel import rsp_shuffle_pallas
+
+SHUFFLE_TILES = (64, 128, 256, 512, 1024)
+DEFAULT_SHUFFLE_TILE = 256
 
 
 def make_permutations(key: jax.Array, n_tiles: int, tile_rows: int):
@@ -22,15 +34,55 @@ def make_permutations(key: jax.Array, n_tiles: int, tile_rows: int):
 
 
 @functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
-def rsp_randomize_block(
-    x: jax.Array, key: jax.Array, *, tile_rows: int = 256, interpret: bool = True
-) -> jax.Array:
-    """Randomize one original block [R, D] on-device (hierarchical shuffle)."""
+def _randomize(x: jax.Array, key: jax.Array, *, tile_rows: int, interpret: bool) -> jax.Array:
     R = x.shape[0]
     if R % tile_rows:
         raise ValueError(f"R={R} must be divisible by tile_rows={tile_rows}")
     tile_perm, intra = make_permutations(key, R // tile_rows, tile_rows)
     return rsp_shuffle_pallas(x, tile_perm, intra, tile_rows=tile_rows, interpret=interpret)
+
+
+def _auto_tile(x: jax.Array, *, interpret: bool) -> int:
+    """Tuner-backed shuffle tile: fastest divisor of ``R`` at this shape.
+
+    Off-TPU the kernel runs in Pallas interpret mode, so every candidate is
+    flagged ``interpreted`` and the tuner falls back to the deterministic
+    default instead of crowning a config from interpreter timings."""
+    R, d = int(x.shape[0]), int(x.shape[1]) if x.ndim > 1 else 1
+    valid = [t for t in SHUFFLE_TILES if R % t == 0]
+    if not valid:
+        raise ValueError(
+            f"no tile in {SHUFFLE_TILES} divides R={R}; pass tile_rows explicitly"
+        )
+    default_tile = DEFAULT_SHUFFLE_TILE if R % DEFAULT_SHUFFLE_TILE == 0 else valid[-1]
+    on_tpu = jax.default_backend() == "tpu"
+    cands = [Candidate("pallas", t, interpreted=not on_tpu) for t in valid]
+
+    def measure(c: Candidate) -> float:
+        key = jax.random.PRNGKey(0)
+        _randomize(x, key, tile_rows=c.tile_rows, interpret=interpret).block_until_ready()
+        t0 = time.perf_counter()
+        _randomize(x, key, tile_rows=c.tile_rows, interpret=interpret).block_until_ready()
+        return time.perf_counter() - t0
+
+    cfg = autotune.choose(
+        "rsp_shuffle", autotune.shape_key(R, d), cands, measure,
+        default=Candidate("pallas", default_tile),
+    )
+    return cfg.tile_rows if cfg.tile_rows in valid else default_tile
+
+
+def rsp_randomize_block(
+    x: jax.Array, key: jax.Array, *, tile_rows: int | None = None, interpret: bool = True
+) -> jax.Array:
+    """Randomize one original block [R, D] on-device (hierarchical shuffle).
+
+    ``tile_rows=None`` autotunes over the divisors of ``R``; an explicit
+    tile is honored verbatim (and is part of the shuffle's definition --
+    two calls with different tiles produce different permutations)."""
+    if tile_rows is None:
+        tile_rows = _auto_tile(x, interpret=interpret)
+    return _randomize(x, key, tile_rows=tile_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))

@@ -59,6 +59,7 @@ from repro.rsp.engine import (
     StoreFetcher,
     as_fetcher,
 )
+from repro.kernels.plan import Predicate, QueryPlan
 from repro.rsp.query import (
     Aggregate,
     AggregateResult,
@@ -127,8 +128,10 @@ __all__ = [
     "NpyChunkSource",
     "PartitionBackend",
     "PartitionRequest",
+    "Predicate",
     "Query",
     "QueryExecutor",
+    "QueryPlan",
     "QueryResult",
     "RSPDataset",
     "RSPSpec",

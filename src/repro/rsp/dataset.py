@@ -509,7 +509,11 @@ class RSPDataset:
         ``"p95"``, ``Aggregate("quantile", q=0.5, by_label=True)``, ...), or
         a sequence of specs; stopping-rule kwargs (``target_rel_err=``,
         ``confidence=``, ``max_blocks=``, ``policy=``, ...) are forwarded to
-        :class:`repro.rsp.query.Query`.  Moment/label-count-only queries are
+        :class:`repro.rsp.query.Query`.  ``where=`` restricts the query to
+        rows passing column predicates (``where="c3 > 0.5"``) and
+        ``columns=`` projects the answer onto a feature subset -- both run
+        through the plan-compiled fused kernels, one filtered pass per
+        block.  Moment/label-count-only queries *without* predicates are
         answered from the partition-time sketches with zero block reads;
         everything else streams blocks through the executor and stops early
         once every CI is tighter than ``target_rel_err``.  Returns the final

@@ -64,6 +64,7 @@ class ExecutorStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    rows_fetched: int = 0  # rows pulled from the fetcher (misses only)
 
     @property
     def blocks_fetched(self) -> int:
@@ -82,6 +83,7 @@ class ExecutorStats:
             hits=self.hits - other.hits,
             misses=self.misses - other.misses,
             evictions=self.evictions - other.evictions,
+            rows_fetched=self.rows_fetched - other.rows_fetched,
         )
 
     def __add__(self, other: "ExecutorStats") -> "ExecutorStats":
@@ -89,6 +91,7 @@ class ExecutorStats:
             hits=self.hits + other.hits,
             misses=self.misses + other.misses,
             evictions=self.evictions + other.evictions,
+            rows_fetched=self.rows_fetched + other.rows_fetched,
         )
 
 
@@ -108,18 +111,22 @@ class CallerStats:
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
+        self._rows = 0
 
     def _hit(self) -> None:
         with self._lock:
             self._hits += 1
 
-    def _miss(self) -> None:
+    def _miss(self, rows: int = 0) -> None:
         with self._lock:
             self._misses += 1
+            self._rows += rows
 
     def stats(self) -> ExecutorStats:
         with self._lock:
-            return ExecutorStats(hits=self._hits, misses=self._misses)
+            return ExecutorStats(
+                hits=self._hits, misses=self._misses, rows_fetched=self._rows
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +263,7 @@ class BlockExecutor:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._rows_fetched = 0
         if self.prefetch > 0:
             n = workers if workers is not None else min(self.prefetch, 8)
             self._pool: ThreadPoolExecutor | None = ThreadPoolExecutor(
@@ -314,10 +322,12 @@ class BlockExecutor:
             block = self.fetcher.fetch(block_id)
             if isinstance(block, np.ndarray):
                 block.setflags(write=False)
+            rows = int(np.shape(block)[0]) if np.ndim(block) else 0
             with self._cache_lock:
                 self._misses += 1
+                self._rows_fetched += rows
                 if counter is not None:
-                    counter._miss()
+                    counter._miss(rows)
                 if self._cache_cap > 0:
                     self._cache[block_id] = block
                     self._cache.move_to_end(block_id)
@@ -337,12 +347,15 @@ class BlockExecutor:
         consumer's window."""
         with self._cache_lock:
             return ExecutorStats(
-                hits=self._hits, misses=self._misses, evictions=self._evictions
+                hits=self._hits,
+                misses=self._misses,
+                evictions=self._evictions,
+                rows_fetched=self._rows_fetched,
             )
 
     def reset_stats(self) -> None:
         with self._cache_lock:
-            self._hits = self._misses = self._evictions = 0
+            self._hits = self._misses = self._evictions = self._rows_fetched = 0
 
     def fetch_async(
         self,

@@ -48,6 +48,7 @@ import numpy as np
 from repro.core.estimators import quantile_from_histogram
 from repro.core.sampler import SamplingPolicy, UniformPolicy, WeightedPolicy
 from repro.kernels.block_sketch import BlockSketch, block_sketch
+from repro.kernels.plan import Predicate, QueryPlan, as_predicates, plan_sketch
 from repro.rsp.engine import CallerStats, ExecutorStats
 
 KINDS = ("mean", "var", "sum", "count", "quantile", "histogram")
@@ -194,6 +195,18 @@ class Query:
     partition-time sketches when present, ``True`` forces it (error if the
     query needs block data), ``False`` always streams blocks.
 
+    ``where=`` restricts every aggregate to the rows passing the
+    conjunctive column predicates (``"c3 > 0.5"`` strings, ``(col, op,
+    value)`` tuples, :class:`~repro.kernels.plan.Predicate` instances, or a
+    sequence of them).  ``columns=`` projects the answer onto those feature
+    columns (``feature=`` on an aggregate then indexes the *projected*
+    axis).  Either one routes execution through the plan-compiled fused
+    kernels (``repro.kernels.plan``): predicates, projection, moments and
+    histograms all happen in one pass per block, and a filtered query
+    reports its observed :attr:`QueryResult.selectivity`.  Queries with
+    ``where=`` cannot use the sketch-only fast path (partition-time
+    sketches are unfiltered), so ``use_sketches=True`` raises.
+
     ``seed`` drives block selection and the bootstrap; ``None`` (the
     default) means "no seed pinned": direct execution falls back to 0, and
     a :class:`~repro.serve.QueryService` replaces it with
@@ -212,8 +225,15 @@ class Query:
     bootstrap: int = 200
     use_sketches: bool | str = "auto"
     sketch_impl: str = "auto"
+    where: tuple[Predicate, ...] = ()
+    columns: tuple[int, ...] | None = None
 
     def __post_init__(self):
+        self.where = as_predicates(self.where)
+        if self.columns is not None:
+            self.columns = tuple(int(c) for c in self.columns)
+            if not self.columns:
+                raise ValueError("columns= must name at least one column")
         if not self.aggregates:
             raise ValueError("query needs at least one aggregate")
         if not 0.0 < self.confidence < 1.0:
@@ -265,7 +285,10 @@ class QueryResult:
     """One anytime answer: the per-aggregate estimates after ``blocks_read``
     of ``total_blocks`` blocks, plus how the answer was produced
     (``from_sketches``; ``executor_stats`` meters the query's own cache
-    hits / misses / fetches so "answered from N of K blocks" is honest)."""
+    hits / misses / fetches so "answered from N of K blocks" is honest).
+    ``selectivity`` is the HT-weighted fraction of scanned rows passing the
+    query's ``where=`` predicates (``None`` for unfiltered queries) -- the
+    quantity that keeps filtered expansions honest."""
 
     aggregates: tuple[AggregateResult, ...]
     blocks_read: int
@@ -275,6 +298,7 @@ class QueryResult:
     converged: bool
     from_sketches: bool
     executor_stats: ExecutorStats | None = None
+    selectivity: float | None = None
 
     def __getitem__(self, name: str) -> AggregateResult:
         for a in self.aggregates:
@@ -308,7 +332,10 @@ class QueryResult:
 class _Ctx:
     """Shared per-query constants handed to every aggregate state."""
 
-    def __init__(self, *, K, N, confidence, uniform, num_classes, bootstrap, seed):
+    def __init__(
+        self, *, K, N, confidence, uniform, num_classes, bootstrap, seed,
+        filtered=False,
+    ):
         self.K = K                      # total blocks
         self.N = N                      # total records
         self.confidence = confidence
@@ -316,6 +343,7 @@ class _Ctx:
         self.num_classes = num_classes
         self.bootstrap = bootstrap
         self.seed = seed
+        self.filtered = filtered        # where= predicates: subpopulation size unknown
 
     def t_half(self, b: int) -> float:
         return t_ppf(0.5 + self.confidence / 2.0, b - 1)
@@ -372,11 +400,17 @@ class _MomentAgg:
                 )
             if kind == "mean":
                 if sk.count > 0:
-                    if weight is not None and not self.agg.by_label:
+                    if (
+                        weight is not None
+                        and not self.agg.by_label
+                        and not self.ctx.filtered
+                    ):
                         # Hansen-Hurwitz: per-draw corpus-sum expansion over N
                         e = weight * sk.sum / max(self.ctx.N, 1)
                     else:
-                        e = sk.mean  # per-block mean (i.i.d. under uniform)
+                        # per-block (sub)population mean; filtered queries
+                        # cannot expand over N (subpopulation size unknown)
+                        e = sk.mean
                     self.samples[g].append(np.asarray(e, dtype=np.float64))
             elif kind == "var":
                 if self.ctx.uniform and sk.count > 1:
@@ -402,7 +436,9 @@ class _MomentAgg:
         if not self.ht[g]:
             return None
         c_hat, sum_hat, ss_hat = self._ht_totals(g)
-        n = float(self.ctx.N) if not self.agg.by_label else c_hat
+        # filtered subpopulations have unknown size: use the HT count
+        use_N = not self.agg.by_label and not self.ctx.filtered
+        n = float(self.ctx.N) if use_N else c_hat
         if n <= 1:
             return None
         mu = sum_hat / n
@@ -424,8 +460,9 @@ class _MomentAgg:
             return None
         if kind == "mean":
             if not ctx.uniform:
-                if self.agg.by_label:
-                    # Hajek ratio: HT class sum over HT class count
+                if self.agg.by_label or ctx.filtered:
+                    # Hajek ratio: HT (sub)population sum over HT count --
+                    # selection bias divides out without knowing the size
                     c_hat, sum_hat, _ = self._ht_totals(g)
                     return sum_hat / max(c_hat, _EPS) if c_hat > 0 else None
                 return np.mean(samples, axis=0)
@@ -585,9 +622,25 @@ class QueryExecutor:
         self.counter = CallerStats()
         if any(a.by_label for a in query.aggregates) and dataset.num_classes is None:
             raise ValueError("by_label aggregates need num_classes on the dataset")
+        # where= / columns= route block passes through the plan-compiled
+        # fused kernels instead of the legacy whole-block sketch
+        self.planned = bool(query.where) or query.columns is not None
+
+    def _plan(self, *, grouped: bool) -> QueryPlan:
+        if grouped:
+            return QueryPlan(
+                predicates=self.q.where,
+                columns=self.q.columns,
+                group_by=self.ds.label_column,
+                num_classes=self.ds.num_classes,
+            )
+        return QueryPlan(predicates=self.q.where, columns=self.q.columns)
 
     # -- sketch fast path --------------------------------------------------
     def _sketch_eligible(self) -> bool:
+        if self.q.where:
+            # partition-time sketches are unfiltered; a predicate needs rows
+            return False
         for a in self.q.aggregates:
             if a.kind not in _SKETCH_ONLY_KINDS:
                 return False
@@ -602,6 +655,16 @@ class QueryExecutor:
         # (a full-corpus pass through the executor) -- meter it honestly
         summaries = self._materialized_summaries()
         stats = combine_summaries(summaries)
+        cols = None
+        if self.q.columns is not None:
+            f = np.asarray(stats.mean).shape[-1]
+            cols = [c % f for c in self.q.columns]
+
+        def proj(arr):
+            # columns= projection: sketches cover all features, so a
+            # projected query just selects before feature indexing
+            return arr if cols is None else np.asarray(arr)[..., cols]
+
         out = []
         for a in self.q.aggregates:
             if a.kind == "count" and a.by_label:
@@ -612,11 +675,11 @@ class QueryExecutor:
             elif a.kind == "count":
                 est = float(stats.count)
             elif a.kind == "mean":
-                est = _sel(stats.mean, a.feature)
+                est = _sel(proj(stats.mean), a.feature)
             elif a.kind == "var":
-                est = _sel(stats.variance, a.feature)
+                est = _sel(proj(stats.variance), a.feature)
             else:  # sum
-                est = _sel(stats.count * stats.mean, a.feature)
+                est = _sel(proj(stats.count * stats.mean), a.feature)
             est = float(est) if np.ndim(est) == 0 else np.asarray(est)
             # all K sketches combined == the exact corpus statistic
             out.append(AggregateResult(a.label, a.kind, est, est, est, 0.0))
@@ -641,12 +704,18 @@ class QueryExecutor:
     # -- progressive path --------------------------------------------------
     def _grid(self) -> tuple[np.ndarray, np.ndarray]:
         """Per-feature histogram grid from the partition-time sketches'
-        global extrema (the only pre-read range information there is)."""
+        global extrema (the only pre-read range information there is),
+        projected onto the query's ``columns=`` when set (filtered data
+        always lies inside the unfiltered extrema)."""
         summaries = self._materialized_summaries()
         lo = np.min([s.min for s in summaries], axis=0).astype(np.float64)
         hi = np.max([s.max for s in summaries], axis=0).astype(np.float64)
         pad = np.maximum(1e-9, 1e-9 * (hi - lo))
-        return lo - pad, hi + pad
+        lo, hi = lo - pad, hi + pad
+        if self.q.columns is not None:
+            cols = [c % lo.shape[0] for c in self.q.columns]
+            lo, hi = lo[cols], hi[cols]
+        return lo, hi
 
     def _make_states(self, needs_hist: bool):
         ctx = _Ctx(
@@ -657,6 +726,7 @@ class QueryExecutor:
             num_classes=self.ds.num_classes,
             bootstrap=self.q.bootstrap,
             seed=self.seed,
+            filtered=bool(self.q.where),
         )
         lo = hi = None
         if needs_hist:
@@ -669,12 +739,40 @@ class QueryExecutor:
                 states.append(_MomentAgg(a, ctx))
         return states, lo, hi
 
+    def _plan_sketches(self, block, lo, hi, needs_hist, grouped, need_whole) -> dict:
+        """Plan-compiled path for ``where=`` / ``columns=`` queries: one
+        fused filter+project+sketch pass per needed grouping, through the
+        plan compile cache and the shared autotuner."""
+        bins = self.q.bins if needs_hist else 0
+        kw = dict(bins=bins) if not needs_hist else dict(bins=bins, lo=lo, hi=hi)
+        whole = per_class = None
+        res = None
+        if need_whole:
+            res = plan_sketch(
+                block, self._plan(grouped=False), impl=self.q.sketch_impl, **kw
+            )
+            whole = res.sketches[0]
+        if grouped:
+            res_g = plan_sketch(
+                block, self._plan(grouped=True), impl=self.q.sketch_impl, **kw
+            )
+            per_class = res_g.sketches
+            res = res if res is not None else res_g
+        return {
+            "whole": whole,
+            "per_class": per_class,
+            "rows_total": res.rows_total,
+            "rows_selected": res.rows_selected,
+        }
+
     def _block_sketches(self, block, lo, hi, needs_hist, grouped, need_whole) -> dict:
         """One fused pass over the block; per-class sub-sketches on demand.
         ``need_whole=False`` (every aggregate grouped) skips the dead
         whole-block pass."""
         from repro.kernels.block_sketch import block_sketch_ref
 
+        if self.planned:
+            return self._plan_sketches(block, lo, hi, needs_hist, grouped, need_whole)
         bins = self.q.bins if needs_hist else 0
         kw = dict(bins=bins) if not needs_hist else dict(bins=bins, lo=lo, hi=hi)
         impl = self.q.sketch_impl
@@ -702,7 +800,11 @@ class QueryExecutor:
                     )
                 else:
                     per_class.append(block_sketch_ref(rows, **kw))
-        return {"whole": whole, "per_class": per_class}
+        n = int(np.shape(block)[0])
+        return {
+            "whole": whole, "per_class": per_class,
+            "rows_total": n, "rows_selected": n,
+        }
 
     def stream(self) -> Iterator[QueryResult]:
         """One anytime :class:`QueryResult` per block read."""
@@ -716,7 +818,8 @@ class QueryExecutor:
             if not self._sketch_eligible():
                 raise ValueError(
                     "use_sketches=True but the query needs block data"
-                    " (quantile/histogram or grouped non-count aggregates)"
+                    " (where= predicates, quantile/histogram, or grouped"
+                    " non-count aggregates)"
                 )
             yield self._answer_from_sketches()
             return
@@ -745,6 +848,8 @@ class QueryExecutor:
                 yield self._pol.sample(1)[0]
 
         b = 0
+        filtered = bool(q.where)
+        sel_rows = tot_rows = 0.0  # HT-weighted selectivity ratio estimator
         for bid, block in executor.map_blocks(
             None, gen_ids(), with_ids=True, counter=self.counter
         ):
@@ -752,6 +857,9 @@ class QueryExecutor:
             if isinstance(self._pol, WeightedPolicy):
                 weight = float(self._pol.weights([bid])[0])
             sk = self._block_sketches(block, lo, hi, needs_hist, grouped, need_whole)
+            scale = weight if weight is not None else float(K)
+            sel_rows += scale * sk["rows_selected"]
+            tot_rows += scale * sk["rows_total"]
             for agg, state in zip(q.aggregates, states):
                 state.update(sk["per_class"] if agg.by_label else [sk["whole"]], weight)
             b += 1
@@ -778,6 +886,9 @@ class QueryExecutor:
                 converged=converged,
                 from_sketches=False,
                 executor_stats=self.counter.stats(),
+                selectivity=(
+                    sel_rows / max(tot_rows, 1.0) if filtered else None
+                ),
             )
             if converged:
                 return

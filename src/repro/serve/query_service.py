@@ -277,7 +277,10 @@ class QueryService:
         ``policy=``, ...).  ``deadline_ms`` is this query's latency budget,
         measured from submission (queue time included): when it fires the
         ticket completes with the current anytime estimate.  Sketch-only
-        queries are answered inline before admission.  ``on_reject="raise"``
+        queries are answered inline before admission (queries with
+        ``where=`` predicates never take that path -- partition-time
+        sketches are unfiltered -- and stream filtered block passes through
+        the plan-compiled kernels instead).  ``on_reject="raise"``
         raises :class:`AdmissionRejected` when the service is saturated;
         ``"ticket"`` returns a rejected ticket instead.
         """

@@ -1,0 +1,12 @@
+"""Shared test configuration.
+
+Tier-1 tests must be deterministic: never let machine-local autotune
+timings decide which kernel implementation a test exercises.  CI sets
+``REPRO_AUTOTUNE=off`` explicitly; this default covers local runs too.
+Tests that exercise the tuner itself override the variable via
+``monkeypatch.setenv``.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_AUTOTUNE", "off")
