@@ -12,11 +12,53 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import time
 
 
 def default_out_dir() -> str:
     return os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def _git(*args: str) -> str | None:
+    try:
+        out = subprocess.run(
+            ("git", "-C", os.path.dirname(os.path.abspath(__file__))) + args,
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    if out.returncode != 0:
+        return None
+    return out.stdout.strip()
+
+
+def provenance() -> dict:
+    """Everything needed to reproduce (or distrust) a benchmark artifact:
+    git SHA + dirty flag, wall-clock timestamp, host platform, jax version
+    and backend, and whether the autotuner was allowed to measure.  Every
+    field degrades to ``None`` rather than raising -- artifacts must write
+    even from a tarball checkout with no git."""
+    sha = _git("rev-parse", "HEAD")
+    status = _git("status", "--porcelain")
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        jax_backend = jax.default_backend()
+    except Exception:
+        jax_version = jax_backend = None
+    return {
+        "git_sha": sha,
+        "git_dirty": bool(status) if status is not None else None,
+        "generated_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax_version": jax_version,
+        "jax_backend": jax_backend,
+        "autotune": os.environ.get("REPRO_AUTOTUNE", "on"),
+    }
 
 
 def write_artifact(
@@ -47,6 +89,7 @@ def write_artifact(
     payload: dict = {
         "suite": suite,
         "generated_unix": time.time(),
+        "provenance": provenance(),
         "rows": records,
     }
     if extra:

@@ -54,12 +54,14 @@ def _register_suites():
     from benchmarks.kernel_bench import ALL_KERNELS
     from benchmarks.engine_bench import engine_rows
     from benchmarks.ingest_bench import ingest_rows
+    from benchmarks.obs_bench import obs_rows
     from benchmarks.query_bench import query_rows
     from benchmarks.serve_bench import serve_rows
 
     SUITES.update({
         "engine": [engine_rows],
         "ingest": [ingest_rows],
+        "obs": [obs_rows],
         "query": [query_rows],
         "serve": [serve_rows],
         "fig1": [ALL_FIGS[0]],

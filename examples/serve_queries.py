@@ -41,15 +41,17 @@ def main():
             # four tenants submit concurrently; nobody waits for anybody
             dashboard = svc.submit(["mean", "var", "count"])          # sketches
             analyst = svc.submit("median", target_rel_err=0.02,
-                                 use_sketches=False)
+                                 use_sketches=False, explain=True)
             batch = svc.submit("mean", max_blocks=4, use_sketches=False,
                                confidence=0.999)
             impatient = svc.submit("mean", target_rel_err=1e-12,
                                    policy="weighted", max_blocks=10**7,
-                                   use_sketches=False, deadline_ms=300)
+                                   use_sketches=False, deadline_ms=300,
+                                   explain=True)
 
             show("dashboard", dashboard, svc.result(dashboard))
-            show("analyst", analyst, svc.result(analyst))
+            analyst_res = svc.result(analyst)
+            show("analyst", analyst, analyst_res)
             show("batch", batch, svc.result(batch))
             res = svc.result(impatient)  # anytime answer AT the deadline
             show("impatient", impatient, res)
@@ -57,6 +59,13 @@ def main():
             truth = data.astype(np.float64).mean(0)
             covered = bool(np.all(a.ci_lo <= truth) & np.all(truth <= a.ci_hi))
             print(f"            anytime CI covers the full-scan mean: {covered}")
+
+            # per-tenant convergence report: each explain=True tenant gets the
+            # paper's error-vs-blocks trajectory for ITS OWN query, straight
+            # off QueryResult.trace -- why did my answer stop when it did?
+            for tag, r in [("analyst", analyst_res), ("impatient", res)]:
+                if r.trace is not None:
+                    print(f"\n[{tag}] {r.trace.report()}")
 
             m = svc.metrics()
             print(f"\nservice: {m.completed} completed, qps={m.qps:.0f}, "

@@ -35,6 +35,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.kernels import autotune
 from repro.kernels.autotune import Candidate
 from repro.kernels.block_sketch.ops import _inv_width
@@ -319,11 +320,17 @@ def compile_plan(
     if impl in ("np", "pallas") and tile_rows is None:
         tile_rows = DEFAULT_NP_TILE if impl == "np" else PALLAS_TILES[0]
     key = (plan.key(), int(num_features), int(bins), impl, tile_rows, bool(interpret))
+    telemetry = obs.enabled()
     with _CACHE_LOCK:
         fn = _CACHE.get(key)
         if fn is not None:
             _HITS += 1
+            if telemetry:
+                obs.get_registry().counter(
+                    "rsp_plan_compile_total", "plan-cache lookups", outcome="hit"
+                ).inc()
             return fn
+    t0 = time.perf_counter()
     if impl == "ref":
         fn = _build_ref(plan, num_features, bins)
     elif impl == "np":
@@ -332,6 +339,13 @@ def compile_plan(
         fn = _build_jax(plan, num_features, bins)
     else:
         fn = _build_pallas(plan, num_features, bins, tile_rows, interpret)
+    if telemetry:
+        reg = obs.get_registry()
+        reg.counter("rsp_plan_compile_total", "plan-cache lookups", outcome="miss").inc()
+        reg.histogram(
+            "rsp_plan_compile_seconds", "executor build time on a cache miss",
+            impl=impl,
+        ).observe(time.perf_counter() - t0)
     with _CACHE_LOCK:
         fn = _CACHE.setdefault(key, fn)
         _MISSES += 1

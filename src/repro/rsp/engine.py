@@ -39,14 +39,18 @@ measures the three fetch paths.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Iterable, Iterator, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.core.registry import RSPStore
+from repro.obs.trace import SpanContext
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,21 +116,31 @@ class CallerStats:
         self._hits = 0
         self._misses = 0
         self._rows = 0
+        self._fetch_s = 0.0
 
     def _hit(self) -> None:
         with self._lock:
             self._hits += 1
 
-    def _miss(self, rows: int = 0) -> None:
+    def _miss(self, rows: int = 0, seconds: float = 0.0) -> None:
         with self._lock:
             self._misses += 1
             self._rows += rows
+            self._fetch_s += seconds
 
     def stats(self) -> ExecutorStats:
         with self._lock:
             return ExecutorStats(
                 hits=self._hits, misses=self._misses, rows_fetched=self._rows
             )
+
+    def fetch_seconds(self) -> float:
+        """Cumulative wall-clock seconds this caller's misses spent inside
+        ``fetcher.fetch`` -- the I/O cost behind the counts in :meth:`stats`
+        (kept off :class:`ExecutorStats` so its integer conservation
+        arithmetic stays exact)."""
+        with self._lock:
+            return self._fetch_s
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +242,20 @@ def as_fetcher(source: Any, *, mode: str = "auto") -> BlockFetcher:
     raise TypeError(f"cannot build a BlockFetcher from {type(source).__name__}")
 
 
+_NULL_CM = contextlib.nullcontext()  # stateless; safe to share
+
+
+def _fetcher_kind(fetcher: Any) -> str:
+    """Telemetry label for the fetch path: memory | store | mmap | other."""
+    if isinstance(fetcher, MemoryFetcher):
+        return "memory"
+    if isinstance(fetcher, StoreFetcher):
+        return "store"
+    if isinstance(fetcher, MmapFetcher):
+        return "mmap"
+    return "other"
+
+
 # ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
@@ -256,6 +284,8 @@ class BlockExecutor:
     ):
         self.fetcher = as_fetcher(fetcher)
         self.prefetch = max(0, int(prefetch))
+        self._kind = _fetcher_kind(self.fetcher)
+        self._obs: tuple[Any, dict] | None = None  # (registry, handles) cache
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
         self._cache_cap = max(0, int(cache_blocks))
         self._cache_lock = threading.Lock()
@@ -271,6 +301,33 @@ class BlockExecutor:
             )
         else:
             self._pool = None
+
+    def _m(self) -> dict:
+        """Lazy per-executor metric handles against the *current* global
+        registry (``obs.reset()`` swaps the registry, so re-resolve when the
+        identity changes).  Call only under ``obs.enabled()``."""
+        reg = obs.get_registry()
+        cached = self._obs
+        if cached is None or cached[0] is not reg:
+            k = self._kind
+            handles = {
+                "hit": reg.counter(
+                    "rsp_engine_fetch_total", "block accesses", kind=k, outcome="hit"),
+                "miss": reg.counter(
+                    "rsp_engine_fetch_total", "block accesses", kind=k, outcome="miss"),
+                "fetch_s": reg.histogram(
+                    "rsp_engine_fetch_seconds", "fetcher.fetch latency", kind=k),
+                "flight_s": reg.histogram(
+                    "rsp_engine_singleflight_wait_seconds",
+                    "time followers wait on the single-flight leader", kind=k),
+                "queue_s": reg.histogram(
+                    "rsp_engine_queue_wait_seconds",
+                    "submit-to-start wait on the prefetch pool", kind=k),
+                "rows": reg.counter(
+                    "rsp_engine_rows_fetched_total", "rows pulled from the fetcher", kind=k),
+            }
+            self._obs = cached = (reg, handles)
+        return cached[1]
 
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
@@ -301,6 +358,7 @@ class BlockExecutor:
         this -- there is nowhere to share the result from).  ``counter``
         attributes the access to one caller (see :class:`CallerStats`).
         """
+        telemetry = obs.enabled()
         while True:
             with self._cache_lock:
                 if block_id in self._cache:
@@ -308,7 +366,10 @@ class BlockExecutor:
                     self._hits += 1
                     if counter is not None:
                         counter._hit()
-                    return self._cache[block_id]
+                    block = self._cache[block_id]
+                    if telemetry:
+                        self._m()["hit"].inc()
+                    return block
                 event = self._inflight.get(block_id) if self._cache_cap > 0 else None
                 if event is None:
                     if self._cache_cap > 0:
@@ -317,9 +378,16 @@ class BlockExecutor:
             # another caller is already fetching this block -- wait, then
             # re-check the cache (a failed or instantly-evicted leader makes
             # this caller lead the retry)
-            event.wait()
+            if telemetry:
+                t0 = time.perf_counter()
+                event.wait()
+                self._m()["flight_s"].observe(time.perf_counter() - t0)
+            else:
+                event.wait()
         try:
+            t0 = time.perf_counter()
             block = self.fetcher.fetch(block_id)
+            fetch_s = time.perf_counter() - t0
             if isinstance(block, np.ndarray):
                 block.setflags(write=False)
             rows = int(np.shape(block)[0]) if np.ndim(block) else 0
@@ -327,13 +395,18 @@ class BlockExecutor:
                 self._misses += 1
                 self._rows_fetched += rows
                 if counter is not None:
-                    counter._miss(rows)
+                    counter._miss(rows, fetch_s)
                 if self._cache_cap > 0:
                     self._cache[block_id] = block
                     self._cache.move_to_end(block_id)
                     while len(self._cache) > self._cache_cap:
                         self._cache.popitem(last=False)
                         self._evictions += 1
+            if telemetry:
+                m = self._m()
+                m["miss"].inc()
+                m["fetch_s"].observe(fetch_s)
+                m["rows"].inc(rows)
             return block
         finally:
             if event is not None:
@@ -363,30 +436,44 @@ class BlockExecutor:
         fn: Callable[[np.ndarray], Any] | None = None,
         *,
         counter: CallerStats | None = None,
+        trace: SpanContext | None = None,
     ) -> Future:
         """Start fetching ``block_id`` (and applying ``fn``) on a worker.
 
         Returns a future; without a pool (``prefetch=0``) the work runs
         immediately on the caller's thread and the future is already done.
-        Either way, errors surface on ``.result()``.
+        Either way, errors surface on ``.result()``.  ``trace`` parents the
+        worker-side span under the submitting caller's span (explicitly --
+        context vars do not follow pool threads).
         """
+        submitted = time.perf_counter() if obs.enabled() else 0.0
         if self._pool is None:
             fut: Future = Future()
             try:
-                fut.set_result(self._task(block_id, fn, counter))
+                fut.set_result(self._task(block_id, fn, counter, trace, submitted))
             except BaseException as e:  # noqa: BLE001 -- mirror executor semantics
                 fut.set_exception(e)
             return fut
-        return self._pool.submit(self._task, block_id, fn, counter)
+        return self._pool.submit(self._task, block_id, fn, counter, trace, submitted)
 
     def _task(
         self,
         block_id: int,
         fn: Callable[[np.ndarray], Any] | None,
         counter: CallerStats | None = None,
+        trace: SpanContext | None = None,
+        submitted: float = 0.0,
     ) -> Any:
-        block = self.fetch(block_id, counter=counter)
-        return fn(block) if fn is not None else block
+        if not obs.enabled():
+            block = self.fetch(block_id, counter=counter)
+            return fn(block) if fn is not None else block
+        if submitted:
+            self._m()["queue_s"].observe(time.perf_counter() - submitted)
+        with obs.get_tracer().span(
+            "engine.fetch", parent=trace, attrs={"block": block_id, "kind": self._kind}
+        ) if trace is not None else _NULL_CM:
+            block = self.fetch(block_id, counter=counter)
+            return fn(block) if fn is not None else block
 
     # -- primitive 1: ordered map with prefetch ----------------------------
     def map_blocks(
@@ -396,20 +483,22 @@ class BlockExecutor:
         *,
         with_ids: bool = False,
         counter: CallerStats | None = None,
+        trace: SpanContext | None = None,
     ) -> Iterator[Any]:
         """Yield ``fn(block)`` for every id *in order*, prefetching ahead.
 
         ``fn`` runs on the worker threads (overlapping fetch and transform);
         ``fn=None`` yields the raw blocks.  ``with_ids=True`` yields
         ``(block_id, result)`` pairs instead.  ``counter`` attributes every
-        access of this stream to one caller (see :class:`CallerStats`).
+        access of this stream to one caller (see :class:`CallerStats`);
+        ``trace`` parents worker-side spans under the caller's span.
         """
         it = iter(ids)
         window: collections.deque[tuple[int, Future]] = collections.deque()
 
         def submit_one() -> None:
             for b in it:
-                window.append((b, self.fetch_async(b, fn, counter=counter)))
+                window.append((b, self.fetch_async(b, fn, counter=counter, trace=trace)))
                 return
 
         try:

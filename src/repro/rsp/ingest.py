@@ -48,11 +48,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import os
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Iterable, Iterator, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.core.partition import _np_rng
 from repro.core.registry import RSPStore
 from repro.core.types import RSPSpec
@@ -474,11 +476,29 @@ def stream_partition(
             fold(window.popleft().result())
         window.append(pool.submit(_scatter_segment, *args, **kw))
 
+    metrics = None
+    if obs.enabled():
+        reg = obs.get_registry()
+        sink = "store" if out is not None else "memory"
+        metrics = {
+            "chunks": reg.counter(
+                "rsp_ingest_chunks_total", "chunks scattered", sink=sink),
+            "rows": reg.counter(
+                "rsp_ingest_rows_scattered_total", "records scattered", sink=sink),
+            "chunk_s": reg.histogram(
+                "rsp_ingest_chunk_seconds",
+                "split + submit + backpressure time per chunk", sink=sink),
+            "rate": reg.gauge(
+                "rsp_ingest_rows_per_second", "overall scatter throughput", sink=sink),
+        }
+        t_ingest = time.perf_counter()
+
     cursor = 0
     cached_i = -1
     inv_perm = inv_assign = None
     try:
         for chunk in src.chunks():
+            t_chunk = time.perf_counter() if metrics is not None else 0.0
             chunk = np.asarray(chunk)
             if chunk.shape[0] == 0:
                 continue
@@ -518,12 +538,19 @@ def stream_partition(
                 submit(i, a, chunk[c0 : c0 + take], inv_perm, inv_assign)
                 cursor += take
                 c0 += take
+            if metrics is not None:
+                metrics["chunks"].inc()
+                metrics["rows"].inc(chunk.shape[0])
+                metrics["chunk_s"].observe(time.perf_counter() - t_chunk)
         if cursor != spec.num_records:
             raise ValueError(
                 f"source produced {cursor} records, spec says {spec.num_records}"
             )
         while window:
             fold(window.popleft().result())
+        if metrics is not None:
+            elapsed = max(time.perf_counter() - t_ingest, 1e-9)
+            metrics["rate"].set(cursor / elapsed)
     except BaseException:
         for fut in window:
             fut.cancel()

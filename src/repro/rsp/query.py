@@ -41,14 +41,17 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
+import time
 from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.estimators import quantile_from_histogram
 from repro.core.sampler import SamplingPolicy, UniformPolicy, WeightedPolicy
 from repro.kernels.block_sketch import BlockSketch, block_sketch
 from repro.kernels.plan import Predicate, QueryPlan, as_predicates, plan_sketch
+from repro.obs.convergence import ConvergenceStep, ConvergenceTrace
 from repro.rsp.engine import CallerStats, ExecutorStats
 
 KINDS = ("mean", "var", "sum", "count", "quantile", "histogram")
@@ -227,6 +230,10 @@ class Query:
     sketch_impl: str = "auto"
     where: tuple[Predicate, ...] = ()
     columns: tuple[int, ...] | None = None
+    #: record a convergence step after *every* block (not only when the
+    #: stopping rule forces result materialization), so ``result.trace``
+    #: reproduces the paper's error-vs-blocks trajectory at full resolution
+    explain: bool = False
 
     def __post_init__(self):
         self.where = as_predicates(self.where)
@@ -288,7 +295,10 @@ class QueryResult:
     hits / misses / fetches so "answered from N of K blocks" is honest).
     ``selectivity`` is the HT-weighted fraction of scanned rows passing the
     query's ``where=`` predicates (``None`` for unfiltered queries) -- the
-    quantity that keeps filtered expansions honest."""
+    quantity that keeps filtered expansions honest.  ``trace`` is the
+    query's :class:`~repro.obs.convergence.ConvergenceTrace` -- one step per
+    progressive emission (every block with ``explain=True``); all anytime
+    results of one query share the same growing trace object."""
 
     aggregates: tuple[AggregateResult, ...]
     blocks_read: int
@@ -299,6 +309,7 @@ class QueryResult:
     from_sketches: bool
     executor_stats: ExecutorStats | None = None
     selectivity: float | None = None
+    trace: ConvergenceTrace | None = None
 
     def __getitem__(self, name: str) -> AggregateResult:
         for a in self.aggregates:
@@ -602,6 +613,23 @@ def _stack_groups(values: list, by_label: bool):
     return np.stack(filled)
 
 
+def _scalar0(value) -> float:
+    """First element of an estimate, for compact convergence-trace rows."""
+    arr = np.asarray(value, dtype=np.float64).ravel()
+    return float(arr[0]) if arr.size else math.nan
+
+
+def _half_width(r: AggregateResult) -> float:
+    """Worst CI half-width of one aggregate (NaN when it carries no CI)."""
+    if r.ci_lo is None or r.ci_hi is None:
+        return math.nan
+    half = (
+        np.asarray(r.ci_hi, dtype=np.float64) - np.asarray(r.ci_lo, dtype=np.float64)
+    ) / 2.0
+    half = np.atleast_1d(half)
+    return float(np.nanmax(half)) if np.any(~np.isnan(half)) else math.nan
+
+
 # ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
@@ -620,11 +648,36 @@ class QueryExecutor:
         # executor's global counters) -- snapshot deltas of the shared
         # executor would claim other queries' I/O the moment two interleave
         self.counter = CallerStats()
+        self._t0 = time.perf_counter()
+        # root span for this query; its context is handed explicitly to the
+        # engine workers (and by QueryService to its scheduler/sweeper) so
+        # cross-thread spans parent under it.  None when telemetry is off.
+        self.span = (
+            obs.get_tracer().start_span(
+                "query",
+                attrs={"aggs": ",".join(a.label for a in query.aggregates)},
+            )
+            if obs.enabled()
+            else None
+        )
         if any(a.by_label for a in query.aggregates) and dataset.num_classes is None:
             raise ValueError("by_label aggregates need num_classes on the dataset")
         # where= / columns= route block passes through the plan-compiled
         # fused kernels instead of the legacy whole-block sketch
         self.planned = bool(query.where) or query.columns is not None
+
+    @property
+    def ctx(self):
+        """Trace context of this query's root span (None when telemetry is
+        off) -- pass as ``parent=`` / ``trace=`` across threads."""
+        return self.span.ctx if self.span is not None else None
+
+    def end_span(self) -> None:
+        """Idempotently close the root span.  Called when the stream
+        finishes or is closed; QueryService also calls it at retire time so
+        never-started generators don't leak open spans."""
+        if self.span is not None:
+            self.span.end()
 
     def _plan(self, *, grouped: bool) -> QueryPlan:
         if grouped:
@@ -683,6 +736,20 @@ class QueryExecutor:
             est = float(est) if np.ndim(est) == 0 else np.asarray(est)
             # all K sketches combined == the exact corpus statistic
             out.append(AggregateResult(a.label, a.kind, est, est, est, 0.0))
+        trace = ConvergenceTrace(
+            confidence=self.q.confidence, target_rel_err=self.q.target_rel_err
+        )
+        trace.record(
+            ConvergenceStep(
+                blocks_read=0,
+                block_id=None,
+                max_rel_err=0.0,
+                estimates={r.name: _scalar0(r.estimate) for r in out},
+                half_widths={r.name: 0.0 for r in out},
+                cum_fetch_s=self.counter.fetch_seconds(),
+                elapsed_s=time.perf_counter() - self._t0,
+            )
+        )
         return QueryResult(
             aggregates=tuple(out),
             blocks_read=0,
@@ -692,6 +759,7 @@ class QueryExecutor:
             converged=True,
             from_sketches=True,
             executor_stats=self.counter.stats(),
+            trace=trace,
         )
 
     def _materialized_summaries(self):
@@ -811,6 +879,14 @@ class QueryExecutor:
         return self._stream(anytime=True)
 
     def _stream(self, *, anytime: bool) -> Iterator[QueryResult]:
+        try:
+            yield from self._stream_impl(anytime=anytime)
+        finally:
+            # covers run(), exhausted streams, and gen.close() on a started
+            # generator; QueryService additionally closes never-started ones
+            self.end_span()
+
+    def _stream_impl(self, *, anytime: bool) -> Iterator[QueryResult]:
         q = self.q
         if q.use_sketches is True or (
             q.use_sketches == "auto" and self._sketch_eligible() and self.ds.has_summaries
@@ -850,8 +926,9 @@ class QueryExecutor:
         b = 0
         filtered = bool(q.where)
         sel_rows = tot_rows = 0.0  # HT-weighted selectivity ratio estimator
+        trace = ConvergenceTrace(confidence=q.confidence, target_rel_err=q.target_rel_err)
         for bid, block in executor.map_blocks(
-            None, gen_ids(), with_ids=True, counter=self.counter
+            None, gen_ids(), with_ids=True, counter=self.counter, trace=self.ctx
         ):
             weight = None
             if isinstance(self._pol, WeightedPolicy):
@@ -866,7 +943,9 @@ class QueryExecutor:
             # materializing results is not free (quantile CIs bootstrap over
             # all b histograms); when nothing can stop the scan early and the
             # caller only wants the final answer, skip the intermediate ones
-            must_emit = anytime or q.target_rel_err is not None or b == max_blocks
+            must_emit = (
+                anytime or q.explain or q.target_rel_err is not None or b == max_blocks
+            )
             if not must_emit:
                 continue
             results = tuple(s.result() for s in states)
@@ -876,6 +955,17 @@ class QueryExecutor:
                 and b >= q.min_blocks
                 and bool(errs)
                 and max(errs) <= q.target_rel_err
+            )
+            trace.record(
+                ConvergenceStep(
+                    blocks_read=b,
+                    block_id=int(bid),
+                    max_rel_err=max(errs) if errs else math.inf,
+                    estimates={r.name: _scalar0(r.estimate) for r in results},
+                    half_widths={r.name: _half_width(r) for r in results},
+                    cum_fetch_s=self.counter.fetch_seconds(),
+                    elapsed_s=time.perf_counter() - self._t0,
+                )
             )
             yield QueryResult(
                 aggregates=results,
@@ -889,6 +979,7 @@ class QueryExecutor:
                 selectivity=(
                     sel_rows / max(tot_rows, 1.0) if filtered else None
                 ),
+                trace=trace,
             )
             if converged:
                 return

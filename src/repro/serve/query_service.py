@@ -53,6 +53,8 @@ import threading
 import time
 from typing import Any, Iterator
 
+from repro import obs
+from repro.obs.metrics import MetricsRegistry
 from repro.rsp.engine import ExecutorStats
 from repro.rsp.query import (
     AggregateResult,
@@ -143,7 +145,9 @@ class QueryTicket:
 class _Run:
     """Scheduler-side state of one admitted/queued progressive query."""
 
-    __slots__ = ("ticket", "qe", "gen", "cost", "last", "admitted", "released")
+    __slots__ = (
+        "ticket", "qe", "gen", "cost", "last", "admitted", "released", "enqueued_at",
+    )
 
     def __init__(self, ticket: QueryTicket, qe: QueryExecutor, cost: int):
         self.ticket = ticket
@@ -153,6 +157,7 @@ class _Run:
         self.last: QueryResult | None = None
         self.admitted = False
         self.released = False
+        self.enqueued_at = time.monotonic()  # admission-wait metering
 
     @property
     def deadline(self) -> float | None:  # StepScheduler priority key
@@ -250,12 +255,35 @@ class QueryService:
             target=self._sweep, name="rsp-serve-deadline", daemon=True
         )
         self._sweeper.start()
-        # metrics (under self._lock)
-        self._submitted = 0
-        self._rejected = 0
-        self._outcomes: dict[str, int] = {o: 0 for o in OUTCOMES}
+        # metrics: one registry per service is the single book of record --
+        # ``metrics()`` is a view over these counters (no parallel private
+        # tallies), and ``registry.to_prometheus()`` is scrape-ready.  The
+        # registry is always live (it backs the public accounting API), only
+        # spans/global-registry hot-path telemetry are gated by repro.obs.
+        self.registry = MetricsRegistry()
+        self._m_submitted = self.registry.counter(
+            "rsp_serve_submitted_total", "queries submitted")
+        self._m_outcomes = {
+            o: self.registry.counter(
+                "rsp_serve_queries_total", "finished queries by outcome", outcome=o)
+            for o in OUTCOMES
+        }
+        self._m_blocks = self.registry.counter(
+            "rsp_serve_blocks_fetched_total", "block fetches by finished queries")
+        self._m_admission_wait = self.registry.histogram(
+            "rsp_serve_admission_wait_seconds",
+            "submit-to-admission wait of queued queries")
+        self._m_step = self.registry.histogram(
+            "rsp_serve_step_seconds", "one-block progressive step latency")
+        self._m_slack = self.registry.histogram(
+            "rsp_serve_deadline_slack_seconds",
+            "remaining budget at answer time (deadline queries, clamped at 0)")
+        self._m_overrun = self.registry.counter(
+            "rsp_serve_deadline_overrun_total",
+            "answers delivered past their deadline")
+        # exact latency samples for percentiles (bucketed histograms would
+        # round p99 up to a bucket edge and trip latency gates); under _lock
         self._latencies_ms: list[float] = []
-        self._blocks_fetched = 0
         self._first_submit: float | None = None
         self._last_finish: float | None = None
 
@@ -296,8 +324,8 @@ class QueryService:
             deadline_ms = self.default_deadline_ms
         deadline = None if deadline_ms is None else time.monotonic() + deadline_ms / 1e3
         ticket = QueryTicket(qid, q, deadline)
+        self._m_submitted.inc()
         with self._lock:
-            self._submitted += 1
             if self._first_submit is None:
                 self._first_submit = ticket.submitted_at
         qe = QueryExecutor(self.ds, q)  # validates the query up front
@@ -419,6 +447,12 @@ class QueryService:
         if ticket.deadline is not None and time.monotonic() >= ticket.deadline:
             self._finalize(run, outcome="deadline")
             return False
+        span = None
+        if obs.enabled() and run.qe.ctx is not None:
+            span = obs.get_tracer().start_span(
+                "serve.step", parent=run.qe.ctx, attrs={"qid": ticket.id}
+            )
+        t0 = time.perf_counter()
         try:
             res = next(run.gen)
         except StopIteration:
@@ -427,6 +461,10 @@ class QueryService:
         except Exception as e:  # noqa: BLE001 -- surface via the ticket
             self._finalize(run, outcome="failed", error=e)
             return False
+        finally:
+            self._m_step.observe(time.perf_counter() - t0)
+            if span is not None:
+                span.end()
         run.last = res
         if res.converged or res.from_sketches:
             self._finalize(run, outcome="converged")
@@ -459,6 +497,7 @@ class QueryService:
         """Tear down a finished run: close its stream (cancelling queued
         prefetches) and release its admission slots, promoting queued runs."""
         run.close_gen()
+        run.qe.end_span()  # closing a never-started gen skips its finally
         with self._lock:
             self._runs.pop(run.ticket.id, None)
         stack = [run]
@@ -470,8 +509,10 @@ class QueryService:
                 r.released = True
             for nxt in self._admission.release(r.cost):
                 nxt.admitted = True
+                self._m_admission_wait.observe(time.monotonic() - nxt.enqueued_at)
                 if nxt.ticket.done:
                     nxt.close_gen()
+                    nxt.qe.end_span()
                     with self._lock:
                         self._runs.pop(nxt.ticket.id, None)
                     stack.append(nxt)
@@ -513,11 +554,20 @@ class QueryService:
             run = self._runs.get(ticket.id)
         if run is None:
             return
+        span = None
+        if obs.enabled() and run.qe.ctx is not None:
+            # runs on the sweeper thread (or a result() waiter); parenting
+            # under the query's root span is explicit, not thread-inherited
+            span = obs.get_tracer().start_span(
+                "serve.deadline", parent=run.qe.ctx, attrs={"qid": ticket.id}
+            )
         res = run.last if run.last is not None else self._anytime_empty(run)
         if ticket._finalize(outcome="deadline", result=res):
             self._record(ticket, blocks=run.qe.counter.stats().blocks_fetched)
         if self._admission.drop(run):
             self._retire(run)  # was still queued: safe to tear down here
+        if span is not None:
+            span.end()
 
     def _anytime_empty(self, run: _Run) -> QueryResult:
         """The anytime answer before any block has been folded: NaN point
@@ -550,40 +600,49 @@ class QueryService:
     # Metrics
     # ------------------------------------------------------------------
     def _record(self, ticket: QueryTicket, *, blocks: int) -> None:
+        self._m_outcomes[ticket.outcome].inc()
+        if ticket.outcome == "rejected":
+            return
+        self._m_blocks.inc(blocks)
+        if ticket.deadline is not None:
+            slack = ticket.deadline - ticket.finished_at
+            self._m_slack.observe(max(slack, 0.0))
+            if slack < 0:
+                self._m_overrun.inc()
         with self._lock:
-            self._outcomes[ticket.outcome] += 1
-            if ticket.outcome == "rejected":
-                self._rejected += 1
-                return
             self._latencies_ms.append(ticket.latency_ms)
-            self._blocks_fetched += blocks
             self._last_finish = ticket.finished_at
 
     def metrics(self) -> ServiceMetrics:
+        """One consistent snapshot, read straight off :attr:`registry` (the
+        counters) and the exact latency samples -- there is no second set of
+        books to drift from the scrape endpoint."""
         executor_delta = self.ds.executor.stats() - self._stats0
+        outcomes = {o: int(c.value) for o, c in self._m_outcomes.items()}
+        blocks_fetched = int(self._m_blocks.value)
         with self._lock:
             lat = sorted(self._latencies_ms)
             completed = len(lat)
             window = None
             if self._first_submit is not None and self._last_finish is not None:
                 window = max(self._last_finish - self._first_submit, 1e-9)
-            return ServiceMetrics(
-                submitted=self._submitted,
-                completed=completed,
-                rejected=self._rejected,
-                cancelled=self._outcomes["cancelled"],
-                deadline_hits=self._outcomes["deadline"],
-                sketch_answers=self._outcomes["sketch"],
-                failed=self._outcomes["failed"],
-                qps=0.0 if window is None else completed / window,
-                latency_p50_ms=_percentile(lat, 0.50),
-                latency_p99_ms=_percentile(lat, 0.99),
-                cache_hit_rate=executor_delta.hit_rate,
-                blocks_fetched=self._blocks_fetched,
-                blocks_per_query=self._blocks_fetched / completed if completed else 0.0,
-                admission=self._admission.snapshot(),
-                executor=executor_delta,
-            )
+        return ServiceMetrics(
+            submitted=int(self._m_submitted.value),
+            completed=completed,
+            rejected=outcomes["rejected"],
+            cancelled=outcomes["cancelled"],
+            deadline_hits=outcomes["deadline"],
+            sketch_answers=outcomes["sketch"],
+            failed=outcomes["failed"],
+            qps=0.0 if window is None else completed / window,
+            latency_p50_ms=_percentile(lat, 0.50),
+            latency_p99_ms=_percentile(lat, 0.99),
+            cache_hit_rate=executor_delta.hit_rate,
+            blocks_fetched=blocks_fetched,
+            blocks_per_query=blocks_fetched / completed if completed else 0.0,
+            admission=self._admission.snapshot(),
+            executor=executor_delta,
+        )
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -616,7 +675,7 @@ class QueryService:
         return (
             f"QueryService(K={self.ds.num_blocks}, capacity={snap.capacity},"
             f" in_flight={snap.in_flight}, queued={snap.queued},"
-            f" submitted={self._submitted})"
+            f" submitted={int(self._m_submitted.value)})"
         )
 
 

@@ -450,3 +450,49 @@ def test_reset_stats():
         ex.fetch(0)
         ex.reset_stats()
         assert ex.stats() == rsp.ExecutorStats()
+
+
+def test_stats_consistent_under_concurrent_hammering():
+    """``stats()`` must be an atomic snapshot: with 8 threads fetching
+    concurrently, every observed snapshot satisfies the conservation law
+    ``accesses == hits + misses`` and counters never run backwards."""
+    import threading
+
+    blocks = _blocks(k=16)
+    stop = threading.Event()
+    bad: list[str] = []
+
+    with BlockExecutor(MemoryFetcher(blocks), prefetch=0, cache_blocks=4) as ex:
+        def hammer(seed: int) -> None:
+            rng = np.random.default_rng(seed)
+            while not stop.is_set():
+                ex.fetch(int(rng.integers(0, 16)))
+
+        def watch() -> None:
+            prev = ex.stats()
+            while not stop.is_set():
+                s = ex.stats()
+                total = s.hits + s.misses
+                if s.blocks_fetched != s.misses:
+                    bad.append(f"blocks_fetched {s.blocks_fetched} != misses {s.misses}")
+                if s.hits < prev.hits or s.misses < prev.misses or total < (
+                    prev.hits + prev.misses
+                ):
+                    bad.append(f"counters ran backwards: {prev} -> {s}")
+                prev = s
+
+        threads = [threading.Thread(target=hammer, args=(i,)) for i in range(8)]
+        threads += [threading.Thread(target=watch) for _ in range(2)]
+        for t in threads:
+            t.start()
+        import time as _time
+
+        _time.sleep(0.5)
+        stop.set()
+        for t in threads:
+            t.join()
+        final = ex.stats()
+
+    assert not bad, bad[:5]
+    assert final.hits + final.misses > 0
+    assert final.blocks_fetched == final.misses
