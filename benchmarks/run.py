@@ -57,6 +57,7 @@ def _register_suites():
     from benchmarks.obs_bench import obs_rows
     from benchmarks.query_bench import query_rows
     from benchmarks.serve_bench import serve_rows
+    from benchmarks.sketch_bench import sketch_rows
 
     SUITES.update({
         "engine": [engine_rows],
@@ -64,6 +65,7 @@ def _register_suites():
         "obs": [obs_rows],
         "query": [query_rows],
         "serve": [serve_rows],
+        "sketch": [sketch_rows],
         "fig1": [ALL_FIGS[0]],
         "fig2": [ALL_FIGS[1]],
         "fig34": [ALL_FIGS[2]],

@@ -62,11 +62,11 @@ def block_moments(block: Array) -> MomentStats:
 
 
 def combine_moments(a: MomentStats, b: MomentStats) -> MomentStats:
-    """Chan et al. parallel combine -- exact, order-independent."""
-    n = a.count + b.count
-    delta = b.mean - a.mean
-    mean = a.mean + delta * (b.count / n)
-    m2 = a.m2 + b.m2 + delta**2 * (a.count * b.count / n)
+    """Chan et al. parallel combine -- exact, order-independent (delegates
+    to the shared :func:`repro.core.moments.chan_merge`)."""
+    from repro.core.moments import chan_merge
+
+    n, mean, m2 = chan_merge(a.count, a.mean, a.m2, b.count, b.mean, b.m2)
     return MomentStats(
         count=n,
         mean=mean,

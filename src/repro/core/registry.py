@@ -51,12 +51,18 @@ class RSPStore:
     """Directory-backed store of one RSP data model."""
 
     MANIFEST = "manifest.json"
+    SKETCHES = "sketches.json"
 
     def __init__(self, root: str):
         self.root = root
         self._cached_manifest: dict | None = None
         self._cached_descriptors: list[BlockDescriptor] | None = None
         self._cached_stat: tuple[int, int] | None = None
+        # in-memory handoff from a streaming ingest: the SketchSuites folded
+        # during the write, so the dataset facade need not re-parse the
+        # (large) sketch sidecar it just streamed out.  Reopened stores
+        # leave this None and parse the sidecar on demand.
+        self.last_ingest_summaries: list | None = None
 
     # -- write --------------------------------------------------------------
     def write_partition(
@@ -64,12 +70,18 @@ class RSPStore:
         blocks: np.ndarray | Iterable[np.ndarray],
         spec: RSPSpec,
         *,
-        summaries: list[dict] | None = None,
+        summaries: list | None = None,
         meta: dict | None = None,
+        sketch_schema: dict | None = None,
     ) -> None:
-        """Materialize blocks + manifest.  ``summaries`` (per-block sketch
-        dicts, see repro.rsp.summaries) and ``meta`` (free-form dataset
-        metadata) ride along in the manifest when provided.
+        """Materialize blocks + manifest.  ``summaries`` -- per-block sketch
+        dicts or objects with ``to_dict()`` (see repro.rsp.sketch /
+        repro.rsp.summaries) -- ``meta`` (free-form dataset metadata) and
+        ``sketch_schema`` (the versioned descriptor of the sketch kinds each
+        summary carries) ride along when provided.  With a ``sketch_schema``
+        the (large) sketch payloads go to a ``sketches.json`` sidecar and
+        the manifest stays light; without one they embed inline, which is
+        the v1 layout old readers understand.
 
         Single-writer per store root: temp names are deterministic
         (``<block>.tmp.npy`` -> one ``os.replace``), so concurrent writers
@@ -95,7 +107,10 @@ class RSPStore:
                 )
             )
         self._sweep_stale(len(descriptors))
-        self._publish_manifest(spec, descriptors, summaries=summaries, meta=meta)
+        self._publish_manifest(
+            spec, descriptors, summaries=summaries, meta=meta,
+            sketch_schema=sketch_schema,
+        )
 
     def create_writer(self, spec: RSPSpec) -> "PartitionWriter":
         """Open a :class:`PartitionWriter` for streaming ingest: preallocated
@@ -116,8 +131,24 @@ class RSPStore:
         return self._cached_descriptors
 
     def summaries(self) -> list[dict] | None:
-        """Per-block summary sketches from the manifest (None if absent)."""
-        return self._manifest().get("summaries")
+        """Per-block summary sketch dicts (None if absent).  v1 manifests
+        carry them inline (cached with the manifest); v2 stores keep them in
+        the ``sketches.json`` sidecar, parsed on every call and *not*
+        cached -- the payload is large and callers (``RSPDataset``,
+        ``BlockSource``) cache the converted suites instead."""
+        m = self._manifest()
+        if "summaries" in m:
+            return m["summaries"]
+        name = m.get("sketches_file")
+        if name is None:
+            return None
+        with open(os.path.join(self.root, name)) as f:
+            return json.load(f)["summaries"]
+
+    def sketch_schema(self) -> dict | None:
+        """Versioned sketch-schema descriptor (None for v1 manifests, which
+        predate suites; their summaries upgrade lazily on load)."""
+        return self._manifest().get("sketch_schema")
 
     def meta(self) -> dict:
         """Free-form dataset metadata from the manifest ({} if absent)."""
@@ -170,17 +201,43 @@ class RSPStore:
         spec: RSPSpec,
         descriptors: list[BlockDescriptor],
         *,
-        summaries: list[dict] | None = None,
+        summaries: list | None = None,
         meta: dict | None = None,
+        sketch_schema: dict | None = None,
     ) -> None:
         """Atomically publish the manifest -- the last step of any write, so
-        readers never observe a manifest ahead of its blocks."""
+        readers never observe a manifest ahead of its blocks (the sketch
+        sidecar, when any, lands just before it)."""
         manifest = {
             "spec": json.loads(spec.to_json()),
             "blocks": [dataclasses.asdict(d) for d in descriptors],
         }
-        if summaries is not None:
-            manifest["summaries"] = summaries
+        sketches_path = os.path.join(self.root, self.SKETCHES)
+        if summaries is not None and sketch_schema is not None:
+            # v2 layout: heavy sketch payloads stream to the sidecar one
+            # suite at a time -- the writer never materializes the whole
+            # serialized payload, and manifest reads stay cheap
+            tmp = sketches_path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write('{"version": %d, "summaries": [' % int(sketch_schema["version"]))
+                for i, s in enumerate(summaries):
+                    if i:
+                        f.write(",")
+                    json.dump(s.to_dict() if hasattr(s, "to_dict") else s, f)
+                f.write("]}")
+            os.replace(tmp, sketches_path)
+            manifest["sketches_file"] = self.SKETCHES
+            manifest["sketch_schema"] = sketch_schema
+        elif summaries is not None:
+            # v1 layout (no schema descriptor): inline summary dicts
+            manifest["summaries"] = [
+                s.to_dict() if hasattr(s, "to_dict") else s for s in summaries
+            ]
+        else:
+            # this partition has no summaries: retire any stale sidecar so
+            # a future layout change cannot pair it with this manifest
+            with contextlib.suppress(FileNotFoundError):
+                os.remove(sketches_path)
         if meta is not None:
             manifest["meta"] = meta
         tmp_manifest = os.path.join(self.root, self.MANIFEST + ".tmp")
@@ -251,7 +308,11 @@ class PartitionWriter:
         self._mms[block_id][offsets] = values
 
     def finalize(
-        self, *, summaries: list[dict] | None = None, meta: dict | None = None
+        self,
+        *,
+        summaries: list[dict] | None = None,
+        meta: dict | None = None,
+        sketch_schema: dict | None = None,
     ) -> RSPStore:
         """Publish the partition: checksum finished temps, rename into place,
         sweep strays, write the manifest.  Returns the store."""
@@ -280,7 +341,8 @@ class PartitionWriter:
             os.replace(tmp, self.store._block_path(k))
         self.store._sweep_stale(len(descriptors))
         self.store._publish_manifest(
-            self.spec, descriptors, summaries=summaries, meta=meta
+            self.spec, descriptors, summaries=summaries, meta=meta,
+            sketch_schema=sketch_schema,
         )
         return self.store
 

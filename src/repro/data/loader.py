@@ -64,12 +64,13 @@ class BlockSource:
         blocks (one full scan, cached)."""
         if self._dataset is not None:
             return self._dataset.summaries
-        from repro.rsp.summaries import BlockSummary, summarize_blocks
+        from repro.rsp.sketch import load_summaries
+        from repro.rsp.summaries import summarize_blocks
 
         if self._summaries is None:
             raw = self._store.summaries() if self._store is not None else None
             if raw is not None:
-                self._summaries = [BlockSummary.from_dict(d) for d in raw]
+                self._summaries = load_summaries(raw)
             else:
                 self._summaries = summarize_blocks(
                     self.load(k) for k in range(self.num_blocks)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.moments import chan_merge
+
 
 def _sketch_kernel(
     x_ref, lo_ref, invw_ref, stats_ref, hist_ref, *, valid_rows, tile_rows, bins
@@ -63,13 +65,15 @@ def _sketch_kernel(
 
     @pl.when(i > 0)
     def _fold():
-        na = stats_ref[0, :]
-        n = na + cnt
-        safe_n = jnp.maximum(n, 1.0)
-        delta = mean_t - stats_ref[1, :]
-        stats_ref[1, :] = stats_ref[1, :] + delta * (cnt / safe_n)
-        stats_ref[2, :] = stats_ref[2, :] + m2_t + delta**2 * (na * cnt / safe_n)
+        # the one shared Chan combine (repro.core.moments), traced with xp=jnp
+        n, mean, m2 = chan_merge(
+            stats_ref[0, :], stats_ref[1, :], stats_ref[2, :],
+            cnt, mean_t, m2_t,
+            xp=jnp,
+        )
         stats_ref[0, :] = n
+        stats_ref[1, :] = mean
+        stats_ref[2, :] = m2
         stats_ref[3, :] = jnp.minimum(stats_ref[3, :], min_t)
         stats_ref[4, :] = jnp.maximum(stats_ref[4, :], max_t)
         hist_ref[...] = hist_ref[...] + hist_t

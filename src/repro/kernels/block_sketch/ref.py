@@ -43,18 +43,20 @@ class BlockSketch:
 
 
 def merge_sketches(a: BlockSketch, b: BlockSketch) -> BlockSketch:
-    """Chan-style parallel combine of two sketches (histograms add)."""
-    n = a.count + b.count
-    if n <= 0:
+    """Chan-style parallel combine of two sketches (histograms add); the
+    moment algebra is the shared :func:`repro.core.moments.chan_merge`."""
+    from repro.core.moments import chan_merge
+
+    if a.count + b.count <= 0:
         return a
-    delta = b.mean - a.mean
     hist = None
     if a.hist is not None and b.hist is not None:
         hist = a.hist + b.hist
+    n, mean, m2 = chan_merge(a.count, a.mean, a.m2, b.count, b.mean, b.m2)
     return BlockSketch(
         count=n,
-        mean=a.mean + delta * (b.count / n),
-        m2=a.m2 + b.m2 + delta**2 * (a.count * b.count / n),
+        mean=mean,
+        m2=m2,
         min=np.minimum(a.min, b.min),
         max=np.maximum(a.max, b.max),
         hist=hist,

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.moments import chan_merge
 from repro.kernels.plan.plan import QueryPlan
 
 _JNP_OPS = {
@@ -107,15 +108,17 @@ def _plan_kernel(
     def _fold():
         nsel_ref[0, 0] = nsel_ref[0, 0] + nsel_t
         for g, (cnt, mean_t, m2_t, min_t, max_t, hist_t) in enumerate(groups):
-            na = stats_ref[5 * g + 0, :]
-            n = na + cnt
-            safe_n = jnp.maximum(n, 1.0)
-            delta = mean_t - stats_ref[5 * g + 1, :]
-            stats_ref[5 * g + 1, :] = stats_ref[5 * g + 1, :] + delta * (cnt / safe_n)
-            stats_ref[5 * g + 2, :] = (
-                stats_ref[5 * g + 2, :] + m2_t + delta**2 * (na * cnt / safe_n)
+            # shared Chan combine (repro.core.moments), traced with xp=jnp
+            n, mean, m2 = chan_merge(
+                stats_ref[5 * g + 0, :],
+                stats_ref[5 * g + 1, :],
+                stats_ref[5 * g + 2, :],
+                cnt, mean_t, m2_t,
+                xp=jnp,
             )
             stats_ref[5 * g + 0, :] = n
+            stats_ref[5 * g + 1, :] = mean
+            stats_ref[5 * g + 2, :] = m2
             stats_ref[5 * g + 3, :] = jnp.minimum(stats_ref[5 * g + 3, :], min_t)
             stats_ref[5 * g + 4, :] = jnp.maximum(stats_ref[5 * g + 4, :], max_t)
             hist_ref[fp * g : fp * (g + 1), :] = (

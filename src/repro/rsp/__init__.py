@@ -41,6 +41,7 @@ from repro.core.sampler import (
     POLICIES,
     BlockSampler,
     HostAssignment,
+    QueryAwarePolicy,
     SamplingPolicy,
     StratifiedPolicy,
     UniformPolicy,
@@ -90,6 +91,22 @@ from repro.rsp.ingest import (
     as_chunk_source,
     stream_partition,
 )
+from repro.rsp.sketch import (
+    SKETCH_KINDS,
+    SKETCH_SCHEMA_VERSION,
+    DistinctSketch,
+    HistogramSketch,
+    KLLSketch,
+    LabelsSketch,
+    MomentsSketch,
+    Sketch,
+    SketchSuite,
+    kll_rank_error_bound,
+    load_summaries,
+    merge_suites,
+    register_sketch,
+    sketch_from_dict,
+)
 from repro.rsp.summaries import (
     BlockSummary,
     combine_summaries,
@@ -115,6 +132,11 @@ __all__ = [
     "BlockSampler",
     "BlockSummary",
     "CallerStats",
+    "DistinctSketch",
+    "HistogramSketch",
+    "KLLSketch",
+    "LabelsSketch",
+    "MomentsSketch",
     "ChunkSource",
     "DirectoryChunkSource",
     "Ensemble",
@@ -132,10 +154,15 @@ __all__ = [
     "Query",
     "QueryExecutor",
     "QueryPlan",
+    "QueryAwarePolicy",
     "QueryResult",
     "RSPDataset",
     "RSPSpec",
+    "SKETCH_KINDS",
+    "SKETCH_SCHEMA_VERSION",
     "SamplingPolicy",
+    "Sketch",
+    "SketchSuite",
     "StoreFetcher",
     "StratifiedPolicy",
     "UniformPolicy",
@@ -148,17 +175,22 @@ __all__ = [
     "combine_summaries",
     "from_source",
     "get_backend",
+    "kll_rank_error_bound",
+    "load_summaries",
     "make_logreg",
     "make_mlp",
     "make_policy",
     "max_divergence_from_summaries",
+    "merge_suites",
     "open",
     "parse_aggregate",
     "partition",
     "register_backend",
     "run_partition",
+    "register_sketch",
     "select_backend",
     "sketch_dispersion",
+    "sketch_from_dict",
     "stream_partition",
     "streaming_estimate",
     "summarize_block",

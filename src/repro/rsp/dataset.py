@@ -60,6 +60,7 @@ from repro.rsp.engine import (
     StoreFetcher,
     as_fetcher,
 )
+from repro.rsp.sketch import SketchSuite, load_summaries, sketch_schema_descriptor
 from repro.rsp.summaries import (
     BlockSummary,
     combine_summaries,
@@ -78,7 +79,7 @@ class RSPDataset:
         blocks: np.ndarray | None = None,
         store: RSPStore | None = None,
         backend: str = "np",
-        summaries: list[BlockSummary] | None = None,
+        summaries: list[SketchSuite] | list[BlockSummary] | None = None,
         num_classes: int | None = None,
         label_column: int = -1,
         fetcher: str | BlockFetcher = "auto",
@@ -177,14 +178,18 @@ class RSPDataset:
         )
         result, chosen = run_partition(request, backend=backend)
         if isinstance(result, RSPStore):
-            # streaming backend wrote directly to the store; sketches folded
-            # during the write are already in its manifest
-            raw = result.summaries()
+            # streaming backend wrote directly to the store; prefer the
+            # suites folded during the write (in-memory handoff) over
+            # re-parsing the sketch sidecar it just streamed out
+            folded = result.last_ingest_summaries
+            if folded is None:
+                raw = result.summaries()
+                folded = None if raw is None else load_summaries(raw)
             return cls(
                 spec,
                 store=result,
                 backend=chosen,
-                summaries=None if raw is None else [BlockSummary.from_dict(d) for d in raw],
+                summaries=folded,
                 num_classes=num_classes,
                 label_column=label_column,
             )
@@ -315,7 +320,7 @@ class RSPDataset:
     # Per-block summary statistics (partition-time sketches)
     # ------------------------------------------------------------------
     @property
-    def summaries(self) -> list[BlockSummary]:
+    def summaries(self) -> list[SketchSuite]:
         if self._summaries is None:
             self._summaries = self._compute_summaries()
         return self._summaries
@@ -326,7 +331,7 @@ class RSPDataset:
         triggering the full-corpus pass that computes them)."""
         return self._summaries is not None
 
-    def _compute_summaries(self, counter=None) -> list[BlockSummary]:
+    def _compute_summaries(self, counter=None) -> list[SketchSuite]:
         label_column = self.label_column if self.num_classes is not None else None
         return summarize_blocks(
             self.executor.map_blocks(None, range(self.num_blocks), counter=counter),
@@ -340,15 +345,22 @@ class RSPDataset:
     def save(self, path: str) -> "RSPDataset":
         """Materialize to ``path`` (blocks + manifest with sketches); chainable."""
         store = RSPStore(path)
+        summaries = self.summaries
+        schema = (
+            sketch_schema_descriptor(summaries)
+            if summaries and isinstance(summaries[0], SketchSuite)
+            else None
+        )
         store.write_partition(
             self.stacked(),
             self.spec,
-            summaries=[s.to_dict() for s in self.summaries],
+            summaries=summaries,
             meta={
                 "backend": self.backend,
                 "num_classes": self.num_classes,
                 "label_column": self.label_column,
             },
+            sketch_schema=schema,
         )
         self._store = store
         return self
@@ -375,7 +387,7 @@ class RSPDataset:
             store.spec(),
             store=store,
             backend=str(meta.get("backend", "np")),
-            summaries=None if raw is None else [BlockSummary.from_dict(d) for d in raw],
+            summaries=None if raw is None else load_summaries(raw),
             num_classes=meta.get("num_classes"),
             label_column=int(meta.get("label_column", -1)),
             fetcher=fetcher,
@@ -396,8 +408,11 @@ class RSPDataset:
     def policy(
         self, policy: str | SamplingPolicy = "uniform", *, seed: int = 0, **kwargs
     ) -> SamplingPolicy:
-        """Resolve a block-selection policy over this dataset.  ``weighted``
-        and ``stratified`` read the partition-time sketches."""
+        """Resolve a block-selection policy over this dataset.  ``weighted``,
+        ``stratified`` and ``query_aware`` read the partition-time sketches;
+        ``query_aware`` additionally accepts the query context
+        (``predicates=``, ``feature=``, ``by_label=``) it scores blocks
+        against."""
         needs_sketches = isinstance(policy, str) and policy != "uniform"
         return make_policy(
             policy,

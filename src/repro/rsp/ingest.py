@@ -59,7 +59,12 @@ from repro.core.partition import _np_rng
 from repro.core.registry import RSPStore
 from repro.core.types import RSPSpec
 from repro.kernels.block_sketch.ref import BlockSketch, block_sketch_ref, merge_sketches
-from repro.rsp.summaries import BlockSummary
+from repro.rsp.sketch import (
+    LabelsSketch,
+    MomentsSketch,
+    SketchSuite,
+    sketch_schema_descriptor,
+)
 
 _DEFAULT_CHUNK_BYTES = 8 << 20  # ~8 MiB of records per auto-sized chunk
 
@@ -332,10 +337,16 @@ def resolve_stream_source(
 
 @dataclasses.dataclass
 class _SketchAcc:
-    """Per-RSP-block fold state, merged in deterministic segment order."""
+    """Per-RSP-block fold state, merged in deterministic segment order.
+
+    ``sketch`` folds the kernel-grade moment sketch; ``suite`` carries the
+    richer mergeable members (KLL quantiles, KMV distinct counts) that are
+    updated with the same rows on the fold thread, in the same deterministic
+    submission order."""
 
     sketch: BlockSketch | None = None
     label_hist: np.ndarray | None = None
+    suite: SketchSuite | None = None
 
 
 def _destinations(i: int, pos: np.ndarray, inv_assign: np.ndarray, delta: int):
@@ -358,24 +369,29 @@ def _scatter_segment(
     with_summaries: bool,
     num_classes: int | None,
     label_column: int,
-) -> list[tuple[int, BlockSketch | None, np.ndarray | None]]:
+) -> list[tuple[int, BlockSketch | None, np.ndarray | None, np.ndarray | None]]:
     """Write one chunk segment (rows of original block ``i``) to its
-    destination offsets; returns per-RSP-block mini-sketches for folding."""
+    destination offsets; returns per-RSP-block mini-sketches (and the flat
+    float64 rows, for the richer suite members) for folding."""
     k, dest = _destinations(i, pos, inv_assign, delta)
     order = np.argsort(k.astype(np.int64) * block_size + dest)
     ks = k[order]
     cuts = np.flatnonzero(np.diff(ks)) + 1
-    results: list[tuple[int, BlockSketch | None, np.ndarray | None]] = []
+    results: list[tuple[int, BlockSketch | None, np.ndarray | None, np.ndarray | None]] = []
     for group in np.split(order, cuts):
         kk = int(k[group[0]])
         vals = rows[group]
         write_rows(kk, dest[group], vals)
-        sketch = hist = None
+        sketch = hist = flat = None
         if with_summaries:
-            flat = np.asarray(vals, dtype=np.float64).reshape(vals.shape[0], -1)
-            sketch = block_sketch_ref(flat)
+            f64 = np.asarray(vals, dtype=np.float64).reshape(vals.shape[0], -1)
+            sketch = block_sketch_ref(f64)
+            # retain the source-dtype rows (not the f64 copy) for the
+            # KLL/KMV fold on the main thread: the in-flight window holds
+            # several of these, and the ingest memory cap is real
+            flat = vals.reshape(vals.shape[0], -1)
             if num_classes is not None:
-                labels = flat[:, label_column]
+                labels = f64[:, label_column]
                 ilabels = labels.astype(np.int64)
                 if (
                     np.any(ilabels != labels)
@@ -387,7 +403,7 @@ def _scatter_segment(
                         f" 0..{num_classes - 1} (wrong label_column or num_classes?)"
                     )
                 hist = np.bincount(ilabels, minlength=num_classes)
-        results.append((kk, sketch, hist))
+        results.append((kk, sketch, hist, flat))
     return results
 
 
@@ -403,7 +419,7 @@ def stream_partition(
     chunk_records: int | None = None,
     workers: int = 4,
     max_inflight: int | None = None,
-) -> tuple[np.ndarray | RSPStore, list[BlockSummary] | None]:
+) -> tuple[np.ndarray | RSPStore, list[SketchSuite] | None]:
     """Single-pass Algorithm 1 over a :class:`ChunkSource` with bounded memory.
 
     With ``out`` set, blocks are written into preallocated per-block ``.npy``
@@ -449,14 +465,21 @@ def stream_partition(
 
     acc = [_SketchAcc() for _ in range(K)]
 
-    def fold(results: list[tuple[int, BlockSketch | None, np.ndarray | None]]) -> None:
+    def fold(results) -> None:
         if not with_summaries:
             return
-        for kk, sketch, hist in results:
+        for kk, sketch, hist, flat in results:
             a = acc[kk]
             a.sketch = sketch if a.sketch is None else merge_sketches(a.sketch, sketch)
             if hist is not None:
                 a.label_hist = hist if a.label_hist is None else a.label_hist + hist
+            if flat is not None:
+                if a.suite is None:
+                    # KLL/KMV members; moments/labels attach at the end from
+                    # the kernel-grade folds above
+                    a.suite = SketchSuite.create(kk, kinds=("moments", "kll", "distinct"))
+                a.suite.sketches["kll"].update(flat)
+                a.suite.sketches["distinct"].update(flat)
 
     pool = ThreadPoolExecutor(max_workers=max(1, workers), thread_name_prefix="rsp-ingest") \
         if workers > 0 else None
@@ -566,28 +589,29 @@ def stream_partition(
 
     summaries = None
     if with_summaries:
-        summaries = [
-            BlockSummary(
-                block_id=k,
-                count=int(a.sketch.count),
-                mean=a.sketch.mean,
-                m2=a.sketch.m2,
-                min=a.sketch.min,
-                max=a.sketch.max,
-                label_hist=a.label_hist,
+        summaries = []
+        for k, a in enumerate(acc):
+            suite = a.suite if a.suite is not None else SketchSuite.create(
+                k, kinds=("moments", "kll", "distinct")
             )
-            for k, a in enumerate(acc)
-        ]
+            suite.sketches["moments"] = MomentsSketch.from_block_sketch(a.sketch)
+            if a.label_hist is not None:
+                suite.sketches["labels"] = LabelsSketch(
+                    num_classes, label_column, hist=a.label_hist
+                )
+            summaries.append(suite)
 
     if writer is not None:
         store = writer.finalize(
-            summaries=None if summaries is None else [s.to_dict() for s in summaries],
+            summaries=summaries,
             meta={
                 "backend": "np_stream",
                 "num_classes": num_classes,
                 "label_column": label_column,
             },
+            sketch_schema=None if summaries is None else sketch_schema_descriptor(summaries),
         )
+        store.last_ingest_summaries = summaries
         return store, summaries
     return dest, summaries
 

@@ -3,7 +3,8 @@
 The paper's central claim is that analysis of a big data set becomes
 analysis of a few RSP blocks.  This module makes that loop explicit: a
 :class:`Query` *declares* what is wanted -- aggregates (``mean`` / ``var`` /
-``sum`` / ``count`` / ``quantile`` / ``histogram``, optionally grouped by
+``sum`` / ``count`` / ``quantile`` / ``histogram`` / ``distinct``,
+optionally grouped by
 label) plus a stopping rule (``target_rel_err``, ``confidence``,
 ``max_blocks``) -- and :class:`QueryExecutor` decides how many blocks to
 read:
@@ -11,6 +12,11 @@ read:
 * **Sketch fast path** -- a query that needs only moments or label counts is
   answered from the partition-time sketches alone: *zero* block reads, and
   the answer is the exact corpus statistic (the sketches combine exactly).
+  When the manifest carries the v2 sketch suite, ungrouped unfiltered
+  ``quantile`` and ``distinct`` aggregates also answer sketch-only: KLL
+  sketches give any quantile within an additive rank-error bound, KMV
+  sketches give distinct counts within a known relative error -- both with
+  honest (non-zero) intervals derived from those bounds.
 * **Progressive path** -- otherwise blocks stream one at a time through the
   dataset's prefetching :class:`~repro.rsp.engine.BlockExecutor` under a
   :class:`~repro.core.sampler.SamplingPolicy`.  Each block is folded through
@@ -54,7 +60,7 @@ from repro.kernels.plan import Predicate, QueryPlan, as_predicates, plan_sketch
 from repro.obs.convergence import ConvergenceStep, ConvergenceTrace
 from repro.rsp.engine import CallerStats, ExecutorStats
 
-KINDS = ("mean", "var", "sum", "count", "quantile", "histogram")
+KINDS = ("mean", "var", "sum", "count", "quantile", "histogram", "distinct")
 _SKETCH_ONLY_KINDS = ("mean", "var", "sum", "count")
 _EPS = 1e-12
 
@@ -149,6 +155,8 @@ class Aggregate:
                 raise ValueError("quantile aggregates need q in (0, 1)")
         elif self.q is not None:
             raise ValueError(f"q= only applies to quantile aggregates, not {self.kind!r}")
+        if self.kind == "distinct" and self.by_label:
+            raise ValueError("distinct aggregates do not support by_label")
 
     @property
     def label(self) -> str:
@@ -166,8 +174,9 @@ _PCT = re.compile(r"^p(\d{1,2}(?:\.\d+)?)$")
 
 
 def parse_aggregate(spec) -> Aggregate:
-    """``"mean" | "var" | "sum" | "count" | "histogram" | "median" | "p95" |
-    "p99.9"`` -> :class:`Aggregate` (instances pass through)."""
+    """``"mean" | "var" | "sum" | "count" | "histogram" | "distinct" |
+    "median" | "p95" | "p99.9"`` -> :class:`Aggregate` (instances pass
+    through)."""
     if isinstance(spec, Aggregate):
         return spec
     if not isinstance(spec, str):
@@ -182,7 +191,7 @@ def parse_aggregate(spec) -> Aggregate:
         return Aggregate("quantile", q=float(m.group(1)) / 100.0)
     raise ValueError(
         f"cannot parse aggregate {spec!r} (mean | var | sum | count | histogram"
-        f" | median | pNN, or an Aggregate instance)"
+        f" | distinct | median | pNN, or an Aggregate instance)"
     )
 
 
@@ -192,11 +201,14 @@ class Query:
 
     The stream stops at the first of: every aggregate's relative CI
     half-width <= ``target_rel_err`` (after ``min_blocks``); ``max_blocks``
-    blocks read (default: one epoch, i.e. all ``K``).  ``histogram``
-    aggregates carry no CI and never drive stopping.  ``use_sketches``:
-    ``"auto"`` answers moment/label-count-only queries from the
-    partition-time sketches when present, ``True`` forces it (error if the
-    query needs block data), ``False`` always streams blocks.
+    blocks read (default: one epoch, i.e. all ``K``).  ``histogram`` and
+    progressive ``distinct`` aggregates carry no CI and never drive
+    stopping.  ``use_sketches``: ``"auto"`` answers from the partition-time
+    sketches when they suffice -- moment/label-count queries exactly, and
+    (given v2 suites) ungrouped unfiltered ``quantile``/``distinct``
+    within the KLL/KMV error bounds; ``True`` forces the sketch path
+    (error if the query needs block data), ``False`` always streams
+    blocks.
 
     ``where=`` restricts every aggregate to the rows passing the
     conjunctive column predicates (``"c3 > 0.5"`` strings, ``(col, op,
@@ -209,6 +221,12 @@ class Query:
     reports its observed :attr:`QueryResult.selectivity`.  Queries with
     ``where=`` cannot use the sketch-only fast path (partition-time
     sketches are unfiltered), so ``use_sketches=True`` raises.
+
+    ``policy="query_aware"`` scores blocks with the query's own shape --
+    predicate selectivity from the KLL sketches, dispersion of the
+    aggregated feature, class coverage for grouped aggregates -- so the
+    progressive scan reads the blocks that matter for *this* query first
+    (Horvitz-Thompson reweighting keeps the estimates unbiased).
 
     ``seed`` drives block selection and the bootstrap; ``None`` (the
     default) means "no seed pinned": direct execution falls back to 0, and
@@ -599,6 +617,37 @@ class _HistAgg:
         return AggregateResult(self.agg.label, "quantile", est, lo, hi, rel)
 
 
+class _DistinctAgg:
+    """distinct: one KMV sketch per (projected) feature, fed the filtered
+    rows of every read block.  A distinct count over a *sample* of blocks is
+    a lower bound on the corpus count -- unseen blocks may hold unseen
+    values -- so the running estimate carries no CI and never drives early
+    stopping; after a full scan it is the KMV estimate of the true count."""
+
+    def __init__(self, agg: Aggregate, ctx: _Ctx):
+        from repro.rsp.sketch import DistinctSketch
+
+        self.agg = agg
+        self.ctx = ctx
+        self.sketch = DistinctSketch()
+
+    def update(self, sketches: Sequence[BlockSketch], weight: float | None) -> None:
+        pass  # fed raw rows via update_rows: distinct needs values, not moments
+
+    def update_rows(self, rows: np.ndarray) -> None:
+        if rows.size:
+            self.sketch.update(rows)
+
+    def result(self) -> AggregateResult:
+        try:
+            vals = self.sketch.estimate()
+        except ValueError:  # no rows survived the predicates yet
+            return AggregateResult(self.agg.label, "distinct", math.nan, None, None, None)
+        est = _sel(np.asarray(vals, dtype=np.float64), self.agg.feature)
+        est = float(est) if np.ndim(est) == 0 else np.asarray(est)
+        return AggregateResult(self.agg.label, "distinct", est, None, None, None)
+
+
 def _stack_groups(values: list, by_label: bool):
     """Stack per-class results into a leading class axis (NaN for classes
     not yet observed); scalar-ize ungrouped single-element results."""
@@ -690,16 +739,56 @@ class QueryExecutor:
         return QueryPlan(predicates=self.q.where, columns=self.q.columns)
 
     # -- sketch fast path --------------------------------------------------
+    def _suites_have(self, kind: str) -> bool:
+        """Whether the dataset's sketch suites carry a ``kind`` member.  A
+        sketch-less dataset reports True: forcing the fast path computes
+        fresh suites, which carry the full default kind set."""
+        if not self.ds.has_summaries:
+            return True
+        summaries = self.ds.summaries
+        if not summaries:
+            return False
+        s = summaries[0]
+        return callable(getattr(s, "get", None)) and s.get(kind) is not None
+
     def _sketch_eligible(self) -> bool:
         if self.q.where:
             # partition-time sketches are unfiltered; a predicate needs rows
             return False
         for a in self.q.aggregates:
-            if a.kind not in _SKETCH_ONLY_KINDS:
-                return False
-            if a.by_label and a.kind != "count":
+            if a.kind in _SKETCH_ONLY_KINDS:
+                if a.by_label and a.kind != "count":
+                    return False
+            elif a.kind == "quantile":
+                # KLL answers any ungrouped quantile within its rank bound
+                if a.by_label or not self._suites_have("kll"):
+                    return False
+            elif a.kind == "distinct":
+                if not self._suites_have("distinct"):
+                    return False
+            else:  # histogram needs the query's own grid/bins -> block data
                 return False
         return True
+
+    def _merged_sketch(self, summaries, kind: str):
+        """Corpus-level sketch of one kind: union of the per-block sketches
+        (fresh object -- the stored suites are never mutated)."""
+        from repro.rsp.sketch import sketch_from_dict
+
+        acc = None
+        for s in summaries:
+            sk = s.get(kind) if callable(getattr(s, "get", None)) else None
+            if sk is None:
+                raise ValueError(
+                    f"sketch-only answers need {kind!r} sketches in the"
+                    " manifest (re-partition the store, or pass"
+                    " use_sketches=False)"
+                )
+            if acc is None:
+                acc = sketch_from_dict(sk.to_dict())
+            else:
+                acc.merge(sk)
+        return acc
 
     def _answer_from_sketches(self) -> QueryResult:
         from repro.rsp.summaries import combine_summaries
@@ -718,8 +807,21 @@ class QueryExecutor:
             # projected query just selects before feature indexing
             return arr if cols is None else np.asarray(arr)[..., cols]
 
+        def shape(v):
+            v = np.asarray(v, dtype=np.float64)
+            return float(v) if v.ndim == 0 else v
+
+        merged_cache: dict = {}
+
+        def merged(kind):
+            if kind not in merged_cache:
+                merged_cache[kind] = self._merged_sketch(summaries, kind)
+            return merged_cache[kind]
+
         out = []
         for a in self.q.aggregates:
+            lo_v = hi_v = None
+            rel = 0.0
             if a.kind == "count" and a.by_label:
                 hists = [s.label_hist for s in summaries]
                 if any(h is None for h in hists):
@@ -731,11 +833,37 @@ class QueryExecutor:
                 est = _sel(proj(stats.mean), a.feature)
             elif a.kind == "var":
                 est = _sel(proj(stats.variance), a.feature)
-            else:  # sum
+            elif a.kind == "sum":
                 est = _sel(proj(stats.count * stats.mean), a.feature)
-            est = float(est) if np.ndim(est) == 0 else np.asarray(est)
-            # all K sketches combined == the exact corpus statistic
-            out.append(AggregateResult(a.label, a.kind, est, est, est, 0.0))
+            elif a.kind == "quantile":
+                # KLL: point at rank q, interval at ranks q -+ eps -- the
+                # sketch's additive rank-error bound, mapped through the
+                # value axis (an honest, data-dependent interval)
+                kll = merged("kll")
+                eps = kll.rank_error_bound()
+                vals = kll.quantile(
+                    [max(a.q - eps, 0.0), a.q, min(a.q + eps, 1.0)]
+                )  # [F, 3]
+                lo_v = shape(_sel(proj(vals[:, 0]), a.feature))
+                est = _sel(proj(vals[:, 1]), a.feature)
+                hi_v = shape(_sel(proj(vals[:, 2]), a.feature))
+                half = (np.asarray(hi_v) - np.asarray(lo_v)) / 2.0
+                rel = float(
+                    np.max(half / np.maximum(np.abs(np.asarray(est)), _EPS))
+                )
+            else:  # distinct: KMV estimate with its known relative SE
+                kmv = merged("distinct")
+                rel = float(kmv.relative_error_bound())
+                est = _sel(proj(kmv.estimate()), a.feature)
+                lo_v = shape(np.asarray(est) * (1.0 - rel))
+                hi_v = shape(np.asarray(est) * (1.0 + rel))
+            est = shape(est)
+            if lo_v is None:
+                # all K sketches combined == the exact corpus statistic
+                lo_v = hi_v = est
+            out.append(AggregateResult(a.label, a.kind, est, lo_v, hi_v, rel))
+        rels = [r.rel_err for r in out if r.rel_err is not None]
+        max_rel = max(rels) if rels else 0.0
         trace = ConvergenceTrace(
             confidence=self.q.confidence, target_rel_err=self.q.target_rel_err
         )
@@ -743,9 +871,9 @@ class QueryExecutor:
             ConvergenceStep(
                 blocks_read=0,
                 block_id=None,
-                max_rel_err=0.0,
+                max_rel_err=max_rel,
                 estimates={r.name: _scalar0(r.estimate) for r in out},
-                half_widths={r.name: 0.0 for r in out},
+                half_widths={r.name: _half_width(r) for r in out},
                 cum_fetch_s=self.counter.fetch_seconds(),
                 elapsed_s=time.perf_counter() - self._t0,
             )
@@ -756,7 +884,9 @@ class QueryExecutor:
             total_blocks=self.ds.num_blocks,
             confidence=self.q.confidence,
             target_rel_err=self.q.target_rel_err,
-            converged=True,
+            converged=(
+                self.q.target_rel_err is None or max_rel <= self.q.target_rel_err
+            ),
             from_sketches=True,
             executor_stats=self.counter.stats(),
             trace=trace,
@@ -771,19 +901,55 @@ class QueryExecutor:
 
     # -- progressive path --------------------------------------------------
     def _grid(self) -> tuple[np.ndarray, np.ndarray]:
-        """Per-feature histogram grid from the partition-time sketches'
-        global extrema (the only pre-read range information there is),
-        projected onto the query's ``columns=`` when set (filtered data
+        """Per-feature histogram grid for the progressive path: the
+        partition-time sketches' global extrema, tightened by the merged KLL
+        sketch when the query is a pure unfiltered, ungrouped quantile --
+        the fixed bin budget then resolves the rank range the query asks
+        about instead of stretching over heavy tails (mass outside still
+        clips into the edge bins, so merged counts stay consistent).
+        Projected onto the query's ``columns=`` when set (filtered data
         always lies inside the unfiltered extrema)."""
         summaries = self._materialized_summaries()
         lo = np.min([s.min for s in summaries], axis=0).astype(np.float64)
         hi = np.max([s.max for s in summaries], axis=0).astype(np.float64)
+        tight = self._kll_grid(summaries, lo, hi)
+        if tight is not None:
+            lo, hi = tight
         pad = np.maximum(1e-9, 1e-9 * (hi - lo))
         lo, hi = lo - pad, hi + pad
         if self.q.columns is not None:
             cols = [c % lo.shape[0] for c in self.q.columns]
             lo, hi = lo[cols], hi[cols]
         return lo, hi
+
+    def _kll_grid(self, summaries, lo, hi):
+        """KLL-seeded ``(lo, hi)``, or None to keep the extrema grid.  Only
+        safe when every grid consumer is an ungrouped, unfiltered quantile:
+        filtered or per-class distributions can concentrate in a corpus
+        tail the tightened grid would clip to one bin."""
+        aggs = self.q.aggregates
+        qs = [a.q for a in aggs if a.kind == "quantile" and not a.by_label]
+        if (
+            not qs
+            or self.q.where
+            or any(a.kind == "histogram" for a in aggs)
+            or any(a.kind == "quantile" and a.by_label for a in aggs)
+        ):
+            return None
+        try:
+            kll = self._merged_sketch(summaries, "kll")
+        except ValueError:  # v1 suites: no KLL -> extrema grid
+            return None
+        eps = kll.rank_error_bound()
+        vals = kll.quantile(
+            [max(min(qs) - 2.0 * eps, 0.0), min(max(qs) + 2.0 * eps, 1.0)]
+        )  # [F, 2]
+        margin = 0.05 * (vals[:, 1] - vals[:, 0])
+        tlo = np.maximum(vals[:, 0] - margin, lo)
+        thi = np.minimum(vals[:, 1] + margin, hi)
+        # constant / degenerate features keep their extrema span
+        bad = ~np.isfinite(tlo) | ~np.isfinite(thi) | ~(thi > tlo)
+        return np.where(bad, lo, tlo), np.where(bad, hi, thi)
 
     def _make_states(self, needs_hist: bool):
         ctx = _Ctx(
@@ -803,6 +969,8 @@ class QueryExecutor:
         for a in self.q.aggregates:
             if a.kind in ("quantile", "histogram"):
                 states.append(_HistAgg(a, ctx, lo, hi))
+            elif a.kind == "distinct":
+                states.append(_DistinctAgg(a, ctx))
             else:
                 states.append(_MomentAgg(a, ctx))
         return states, lo, hi
@@ -894,11 +1062,17 @@ class QueryExecutor:
             if not self._sketch_eligible():
                 raise ValueError(
                     "use_sketches=True but the query needs block data"
-                    " (where= predicates, quantile/histogram, or grouped"
-                    " non-count aggregates)"
+                    " (where= predicates, histogram, grouped non-count"
+                    " aggregates, or quantile/distinct without the matching"
+                    " partition-time sketches)"
                 )
-            yield self._answer_from_sketches()
-            return
+            res = self._answer_from_sketches()
+            # auto mode falls through to the progressive path when the
+            # sketch error bound (KLL/KMV) cannot meet the requested target;
+            # forcing use_sketches=True returns the bound-limited answer
+            if q.use_sketches is True or res.converged:
+                yield res
+                return
 
         executor = self.ds.executor
         # sketch probabilities (weighted/stratified) and the histogram grid
@@ -906,7 +1080,23 @@ class QueryExecutor:
         # every block -- those passes belong in this query's honest I/O count
         if isinstance(q.policy, str) and q.policy != "uniform":
             self._materialized_summaries()
-        self._pol = self.ds.policy(q.policy, seed=self.seed)
+        pol_kwargs = {}
+        if q.policy == "query_aware":
+            # hand the policy this query's shape: its predicates (KLL
+            # selectivity), the aggregated feature (dispersion), and
+            # whether it groups by label (class coverage)
+            feature = None
+            feats = {a.feature for a in q.aggregates if a.feature is not None}
+            if len(feats) == 1:
+                feature = next(iter(feats))
+                if q.columns is not None:  # map back to corpus column ids
+                    feature = q.columns[feature % len(q.columns)]
+            pol_kwargs = dict(
+                predicates=q.where,
+                feature=feature,
+                by_label=any(a.by_label for a in q.aggregates),
+            )
+        self._pol = self.ds.policy(q.policy, seed=self.seed, **pol_kwargs)
         uniform = isinstance(self._pol, UniformPolicy)
         K = self.ds.num_blocks
         max_blocks = q.max_blocks if q.max_blocks is not None else K
@@ -915,6 +1105,7 @@ class QueryExecutor:
         if max_blocks < 1:
             raise ValueError("max_blocks must be >= 1")
         needs_hist = any(a.kind in ("quantile", "histogram") for a in q.aggregates)
+        needs_rows = any(a.kind == "distinct" for a in q.aggregates)
         grouped = any(a.by_label for a in q.aggregates)
         need_whole = any(not a.by_label for a in q.aggregates)
         states, lo, hi = self._make_states(needs_hist)
@@ -934,6 +1125,21 @@ class QueryExecutor:
             if isinstance(self._pol, WeightedPolicy):
                 weight = float(self._pol.weights([bid])[0])
             sk = self._block_sketches(block, lo, hi, needs_hist, grouped, need_whole)
+            if needs_rows:
+                rows = np.asarray(block, dtype=np.float64)
+                rows = rows.reshape(rows.shape[0], -1)
+                if q.where:
+                    xf = rows.astype(np.float32)
+                    keep = np.ones(rows.shape[0], dtype=bool)
+                    for p in q.where:
+                        keep &= p.mask(xf)
+                    rows = rows[keep]
+                if q.columns is not None:
+                    cols = [c % rows.shape[1] for c in q.columns]
+                    rows = rows[:, cols]
+                for state in states:
+                    if isinstance(state, _DistinctAgg):
+                        state.update_rows(rows)
             scale = weight if weight is not None else float(K)
             sel_rows += scale * sk["rows_selected"]
             tot_rows += scale * sk["rows_total"]

@@ -1,12 +1,19 @@
-"""Per-block summary statistics, computed once at partition time.
+"""Per-block summaries, computed once at partition time.
 
 In the style of partition-selection summary stats (Rong et al., 2020), every
-RSP block carries a small sketch -- record count, per-feature moments and
-extrema, and (for labelled data) a label histogram -- written alongside the
-block at partition/store time.  Downstream consumers then answer questions
-like "estimate the corpus mean from g blocks" or "how far is block k's label
-distribution from the corpus" without touching block data at all: the
-sketches combine exactly (Chan-style parallel moments, histogram addition).
+RSP block carries a small sketch suite -- record count, per-feature moments
+and extrema, a KLL quantile sketch, a KMV distinct-count sketch, and (for
+labelled data) a label histogram -- written alongside the block at
+partition/store time.  Downstream consumers then answer questions like
+"estimate the corpus mean / median / cardinality from the sketches" or "how
+far is block k's label distribution from the corpus" without touching block
+data at all: every member sketch merges exactly or within its analytic
+error bound (see :mod:`repro.rsp.sketch`).
+
+``summarize_block`` returns a :class:`repro.rsp.sketch.SketchSuite`; the
+frozen :class:`BlockSummary` dataclass remains as the v1 manifest container
+(old stores deserialize through it) and is attribute-compatible with the
+suite, so consumers are agnostic to which one they hold.
 """
 
 from __future__ import annotations
@@ -16,12 +23,23 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from repro.core.estimators import MomentStats, combine_moments
+from repro.core.estimators import MomentStats
+from repro.core.moments import chan_merge
+from repro.rsp.sketch import (
+    DEFAULT_KLL_K,
+    DEFAULT_KMV_K,
+    MomentsSketch,
+    SketchSuite,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class BlockSummary:
-    """Sketch of one RSP block: moments + extrema (+ label histogram)."""
+    """Legacy (schema v1) container: moments + extrema (+ label histogram).
+
+    New code receives :class:`repro.rsp.sketch.SketchSuite` from
+    ``summarize_block``; this dataclass persists as the v1 wire format and
+    the minimal duck-type the consumers rely on."""
 
     block_id: int
     count: int
@@ -88,41 +106,40 @@ def summarize_block(
     *,
     label_column: int | None = None,
     num_classes: int | None = None,
-) -> BlockSummary:
-    """Compute one block's sketch.  ``label_column`` (with ``num_classes``)
-    additionally records the label histogram of that column.
+    kll_k: int = DEFAULT_KLL_K,
+    kmv_k: int = DEFAULT_KMV_K,
+    seed: int = 0,
+    kinds: tuple[str, ...] | list[str] | None = None,
+) -> SketchSuite:
+    """Compute one block's sketch suite.  ``label_column`` (with
+    ``num_classes``) additionally records the label histogram of that column.
+    ``kinds`` restricts which sketches are folded (default: the full suite)
+    -- e.g. ``("moments",)`` when only exact moments are needed and the
+    KLL/KMV folding cost would be waste.
 
     Moments/extrema come from the fused one-pass block sketch
     (``repro.kernels.block_sketch``) -- the same primitive the query layer
-    folds at read time, so partition- and query-time sketching share one
-    single-pass implementation."""
+    folds at read time -- wrapped unmodified into the suite's ``moments``
+    member; the richer members (KLL quantiles, KMV distinct counts) fold the
+    same rows on the host."""
     from repro.kernels.block_sketch import block_sketch_ref
 
     x = np.asarray(block, dtype=np.float64).reshape(block.shape[0], -1)
     sk = block_sketch_ref(x)
-    hist = None
-    if label_column is not None and num_classes is not None:
-        labels = x[:, label_column]
-        ilabels = labels.astype(np.int64)
-        if (
-            np.any(ilabels != labels)
-            or ilabels.min(initial=0) < 0
-            or ilabels.max(initial=0) >= num_classes
-        ):
-            raise ValueError(
-                f"block {block_id}: label column {label_column} has values outside"
-                f" 0..{num_classes - 1} (wrong label_column or num_classes?)"
-            )
-        hist = np.bincount(ilabels, minlength=num_classes)
-    return BlockSummary(
-        block_id=block_id,
-        count=int(sk.count),
-        mean=sk.mean,
-        m2=sk.m2,
-        min=sk.min,
-        max=sk.max,
-        label_hist=hist,
+    suite = SketchSuite.create(
+        block_id,
+        label_column=label_column,
+        num_classes=num_classes,
+        kll_k=kll_k,
+        kmv_k=kmv_k,
+        seed=seed,
+        kinds=kinds,
     )
+    suite.sketches["moments"] = MomentsSketch.from_block_sketch(sk)
+    for kind, member in suite.sketches.items():
+        if kind != "moments":
+            member.update(x)
+    return suite
 
 
 def summarize_blocks(
@@ -130,23 +147,28 @@ def summarize_blocks(
     *,
     label_column: int | None = None,
     num_classes: int | None = None,
-) -> list[BlockSummary]:
+    **kwargs,
+) -> list[SketchSuite]:
     return [
-        summarize_block(b, k, label_column=label_column, num_classes=num_classes)
+        summarize_block(
+            b, k, label_column=label_column, num_classes=num_classes, **kwargs
+        )
         for k, b in enumerate(blocks)
     ]
 
 
 def combine_summaries(
-    summaries: Sequence[BlockSummary],
+    summaries: Sequence,
     *,
     weights: Sequence[float] | np.ndarray | None = None,
     total_count: int | None = None,
 ) -> MomentStats:
     """Corpus-level moments from block sketches alone (no data reads).
 
-    Without ``weights`` this is the exact Chan-style parallel combine over the
-    given sketches.  With ``weights`` (one per sketch, e.g. from
+    Accepts any mix of :class:`BlockSummary` and
+    :class:`~repro.rsp.sketch.SketchSuite` (they share the moment surface).
+    Without ``weights`` this is the exact Chan-style parallel combine over
+    the given sketches.  With ``weights`` (one per sketch, e.g. from
     ``SamplingPolicy.weights``) it is the Horvitz-Thompson estimate for a
     non-uniform block-level sample: block totals are expanded by their weight
     (``sum_k w_k * t_k`` estimates the corpus total), which undoes the
@@ -161,7 +183,12 @@ def combine_summaries(
     if weights is None:
         acc = summaries[0].moments()
         for s in summaries[1:]:
-            acc = combine_moments(acc, s.moments())
+            m = s.moments()
+            acc.count, acc.mean, acc.m2 = chan_merge(
+                acc.count, acc.mean, acc.m2, m.count, m.mean, m.m2
+            )
+            acc.min = np.minimum(acc.min, m.min)
+            acc.max = np.maximum(acc.max, m.max)
         return acc
     w = np.asarray(weights, dtype=np.float64)
     if w.shape != (len(summaries),) or np.any(w < 0):
@@ -187,7 +214,7 @@ def combine_summaries(
     )
 
 
-def max_divergence_from_summaries(summaries: Sequence[BlockSummary]) -> float:
+def max_divergence_from_summaries(summaries: Sequence) -> float:
     """Worst L-inf distance between any block's label distribution and the
     corpus label distribution, computed purely from the sketches (Fig. 2a)."""
     hists = [s.label_hist for s in summaries]

@@ -330,20 +330,32 @@ class QueryService:
                 self._first_submit = ticket.submitted_at
         qe = QueryExecutor(self.ds, q)  # validates the query up front
 
-        # zero-I/O fast path: answer moment/label-count queries from the
-        # sketches synchronously -- no admission, no scheduling, no fetches
-        if q.use_sketches is True or (
+        # zero-I/O fast path: answer sketch-eligible queries (moments,
+        # label counts, and -- with v2 suites -- ungrouped unfiltered
+        # quantile/distinct) synchronously from the sketches -- no
+        # admission, no scheduling, no fetches.  In auto mode a
+        # bound-limited sketch answer that misses the query's
+        # target_rel_err is NOT final: the query falls through to the
+        # scheduled progressive path instead of silently under-delivering.
+        sketch_forced = q.use_sketches is True
+        sketch_auto = (
             q.use_sketches == "auto" and qe._sketch_eligible() and self.ds.has_summaries
-        ):
+        )
+        if sketch_forced or sketch_auto:
             try:
-                result = qe.run()
+                # run() validates forced queries (raises if block data is
+                # needed); the direct call skips the progressive fallback
+                # that must stay behind admission control
+                result = qe.run() if sketch_forced else qe._answer_from_sketches()
             except Exception as e:  # noqa: BLE001 -- surface via the ticket
                 ticket._finalize(outcome="failed", result=None, error=e)
                 self._record(ticket, blocks=0)
                 return ticket
-            ticket._finalize(outcome="sketch", result=result)
-            self._record(ticket, blocks=result.executor_stats.blocks_fetched)
-            return ticket
+            if sketch_forced or result.converged:
+                qe.end_span()
+                ticket._finalize(outcome="sketch", result=result)
+                self._record(ticket, blocks=result.executor_stats.blocks_fetched)
+                return ticket
 
         cost = self.ds.executor.prefetch + 1
         if q.max_blocks is not None:

@@ -110,12 +110,56 @@ def test_sketch_only_grouped_count(labelled_ds):
     np.testing.assert_allclose(res["count/label"].estimate, truth)
 
 
-def test_quantile_never_sketch_only(labelled_ds):
+def test_quantile_sketch_only_within_kll_bound(labelled_ds):
+    """v2 suites answer ungrouped unfiltered quantiles with zero block
+    reads, and the estimate lands within the KLL additive rank bound."""
+    ds, data = labelled_ds
+    full = np.asarray(data, dtype=np.float64)
+    eps = ds.summaries[0].get("kll").rank_error_bound()
+    for spec, q in (("median", 0.5), ("p95", 0.95)):
+        res = ds.query(spec)
+        assert res.from_sketches and res.blocks_read == 0
+        name = "p50" if spec == "median" else "p95"
+        est = np.asarray(res[name].estimate)
+        lo = np.quantile(full, max(q - eps, 0.0), axis=0)
+        hi = np.quantile(full, min(q + eps, 1.0), axis=0)
+        assert np.all(est >= lo - 1e-9) and np.all(est <= hi + 1e-9)
+        # honest interval: quantile sketch answers are not exact
+        assert res[name].rel_err is not None and res[name].rel_err > 0.0
+
+
+def test_distinct_sketch_only_within_kmv_bound(labelled_ds):
+    ds, data = labelled_ds
+    res = ds.query("distinct")
+    assert res.from_sketches and res.blocks_read == 0
+    est = np.asarray(res["distinct"].estimate)
+    full = np.asarray(data, dtype=np.float64)
+    truth = np.array([np.unique(full[:, j]).size for j in range(full.shape[1])])
+    bound = ds.summaries[0].get("distinct").relative_error_bound()
+    # exact below k (the label column), within ~4 sigma above it
+    assert np.all(np.abs(est - truth) <= np.maximum(4.0 * bound * truth, 1.0))
+
+
+def test_quantile_auto_falls_back_on_tight_target(labelled_ds):
+    """auto mode streams blocks when the KLL bound cannot meet the target;
+    use_sketches=True returns the bound-limited sketch answer instead."""
     ds, _ = labelled_ds
-    res = ds.query("median", max_blocks=5)
+    res = ds.query("median", target_rel_err=1e-7, max_blocks=5)
+    assert not res.from_sketches and res.blocks_read > 0
+    forced = ds.query("median", use_sketches=True, target_rel_err=1e-7)
+    assert forced.from_sketches and not forced.converged
+
+
+def test_grouped_quantile_needs_blocks(labelled_ds):
+    ds, _ = labelled_ds
+    res = ds.query(Aggregate("quantile", q=0.5, by_label=True), max_blocks=5)
     assert not res.from_sketches and res.blocks_read > 0
     with pytest.raises(ValueError):
-        ds.query("median", use_sketches=True, max_blocks=5)
+        ds.query(
+            Aggregate("quantile", q=0.5, by_label=True),
+            use_sketches=True,
+            max_blocks=5,
+        )
 
 
 def test_use_sketches_false_streams(labelled_ds):

@@ -1,0 +1,242 @@
+"""Unified sketch subsystem: registry round-trips, manifest schema
+versioning (checked-in v1 fixture -> lazy upgrade), the v2 sidecar store
+layout, and merge/accuracy contracts of the KLL and KMV members."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import rsp
+from repro.core.registry import RSPStore
+from repro.rsp.sketch import (
+    SKETCH_SCHEMA_VERSION,
+    DistinctSketch,
+    HistogramSketch,
+    KLLSketch,
+    MomentsSketch,
+    SketchSuite,
+    kll_rank_error_bound,
+    load_summaries,
+    merge_suites,
+    sketch_from_dict,
+    sketch_schema_descriptor,
+)
+from repro.rsp.summaries import BlockSummary, summarize_block, summarize_blocks
+
+V1_FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "v1_store")
+
+
+def _rows(n=512, f=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.lognormal(mean=0.3, sigma=1.1, size=(n, f))
+
+
+# ---------------------------------------------------------------------------
+# Registry / versioned serialization
+# ---------------------------------------------------------------------------
+
+def _roundtrip(sk):
+    """to_dict -> real JSON -> from_dict (via the registry), twice."""
+    once = sketch_from_dict(json.loads(json.dumps(sk.to_dict())))
+    twice = sketch_from_dict(json.loads(json.dumps(once.to_dict())))
+    return once, twice
+
+
+def test_all_four_kinds_roundtrip_bit_exact():
+    rows = _rows()
+    kinds = {
+        "moments": MomentsSketch().update(rows),
+        "histogram": HistogramSketch(
+            16, rows.min(axis=0), rows.max(axis=0)
+        ).update(rows),
+        "kll": KLLSketch(64, seed=9).update(rows),
+        "distinct": DistinctSketch(128).update(rows),
+    }
+    for kind, sk in kinds.items():
+        once, twice = _roundtrip(sk)
+        assert type(once) is type(sk), kind
+        # bit-exact: every float survives JSON (which round-trips float64
+        # exactly) and re-serializes to the identical payload
+        assert once.to_dict() == sk.to_dict(), kind
+        assert twice.to_dict() == sk.to_dict(), kind
+    # revived sketches answer identically, not just serialize identically
+    m, _ = _roundtrip(kinds["moments"])
+    np.testing.assert_array_equal(m.mean, kinds["moments"].mean)
+    np.testing.assert_array_equal(m.variance, kinds["moments"].variance)
+    k, _ = _roundtrip(kinds["kll"])
+    qs = [0.1, 0.5, 0.95]
+    np.testing.assert_array_equal(k.quantile(qs), kinds["kll"].quantile(qs))
+    d, _ = _roundtrip(kinds["distinct"])
+    np.testing.assert_array_equal(d.estimate(), kinds["distinct"].estimate())
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown sketch kind"):
+        sketch_from_dict({"kind": "nope"})
+
+
+def test_suite_roundtrip_and_merge_matches_bulk():
+    rows = _rows(600, 3, seed=1)
+    halves = [rows[:301], rows[301:]]
+    suites = [
+        summarize_block(h.astype(np.float32), i, kll_k=64, kmv_k=128)
+        for i, h in enumerate(halves)
+    ]
+    revived = load_summaries([json.loads(json.dumps(s.to_dict())) for s in suites])
+    for orig, back in zip(suites, revived):
+        assert back.to_dict() == orig.to_dict()
+    merged = merge_suites(revived)
+    bulk = summarize_block(rows.astype(np.float32), 0, kll_k=64, kmv_k=128)
+    assert merged.count == bulk.count == rows.shape[0]
+    np.testing.assert_allclose(merged.mean, bulk.mean, rtol=1e-12)
+    np.testing.assert_allclose(merged.m2, bulk.m2, rtol=1e-9)
+    np.testing.assert_array_equal(merged.min, bulk.min)
+    np.testing.assert_array_equal(merged.max, bulk.max)
+    # inputs must not be mutated by the merge
+    assert revived[0].to_dict() == suites[0].to_dict()
+
+
+def test_kll_merged_rank_error_within_bound():
+    rng = np.random.default_rng(3)
+    parts = [rng.lognormal(0.0, 1.4, size=(800, 2)) for _ in range(6)]
+    k = 128
+    suites = []
+    for i, p in enumerate(parts):
+        suites.append(SketchSuite.create(i, kll_k=k, kinds=["moments", "kll"]).update(p))
+    kll = merge_suites(suites).get("kll")
+    eps = kll_rank_error_bound(k)
+    assert eps == kll.rank_error_bound()
+    full = np.sort(np.concatenate(parts, axis=0), axis=0)
+    n = full.shape[0]
+    for q in (0.05, 0.5, 0.95):
+        est = kll.quantile([q])[:, 0]
+        lo = full[max(int(np.floor((q - eps) * n)), 0)]
+        hi = full[min(int(np.ceil((q + eps) * n)), n - 1)]
+        assert np.all(est >= lo) and np.all(est <= hi)
+
+
+def test_kmv_merge_equals_union_sketch():
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 5000, size=(4000, 2)).astype(np.float64)
+    b = rng.integers(2500, 9000, size=(4000, 2)).astype(np.float64)
+    da, db = DistinctSketch(256).update(a), DistinctSketch(256).update(b)
+    both = DistinctSketch(256).update(np.concatenate([a, b], axis=0))
+    np.testing.assert_array_equal(da.merge(db).estimate(), both.estimate())
+
+
+# ---------------------------------------------------------------------------
+# v1 manifests: the checked-in fixture opens unchanged
+# ---------------------------------------------------------------------------
+
+def test_v1_fixture_opens_through_new_schema_path():
+    store = RSPStore(V1_FIXTURE)
+    assert store.sketch_schema() is None  # predates suite schemas
+    raw = store.summaries()
+    assert raw and "sketches" not in raw[0]  # genuinely v1 on disk
+    ds = rsp.open(V1_FIXTURE)
+    try:
+        assert ds.has_summaries and isinstance(ds.summaries[0], SketchSuite)
+        # sketch-only moments still work -- and still read zero blocks
+        before = ds.executor.stats()
+        res = ds.query(["mean", "count"])
+        assert res.from_sketches
+        assert (ds.executor.stats() - before).blocks_fetched == 0
+        data = np.concatenate(
+            [np.asarray(store.load_block(k)) for k in range(store.num_blocks())]
+        ).astype(np.float64)
+        assert float(res["count"].estimate) == data.shape[0]
+        np.testing.assert_allclose(res["mean"].estimate, data.mean(axis=0), rtol=1e-12)
+    finally:
+        ds.close()
+
+
+def test_v1_lazy_upgrade_answers_identical_moments():
+    store = RSPStore(V1_FIXTURE)
+    for d in store.summaries():
+        legacy = BlockSummary.from_dict(d)
+        suite = SketchSuite.from_dict(d)  # lazy v1 upgrade
+        assert suite.block_id == legacy.block_id
+        assert suite.count == legacy.count
+        for attr in ("mean", "m2", "min", "max", "variance", "std"):
+            np.testing.assert_array_equal(
+                getattr(suite, attr), getattr(legacy, attr), err_msg=attr
+            )
+        np.testing.assert_array_equal(suite.label_hist, legacy.label_hist)
+        # richer kinds are honestly absent, not fabricated
+        assert suite.get("kll") is None and suite.get("distinct") is None
+
+
+def test_v1_upgrade_rewrites_as_v2_without_changing_answers(tmp_path):
+    ds = rsp.open(V1_FIXTURE)
+    try:
+        v1_mean = ds.query(["mean"])["mean"].estimate
+        out = str(tmp_path / "upgraded.rsp")
+        ds.save(out)
+    finally:
+        ds.close()
+    # the rewrite keeps the v1 layout for upgraded (moments-only) suites:
+    # a moments+labels suite has no schema descriptor worth pinning
+    ds2 = rsp.open(out)
+    try:
+        np.testing.assert_array_equal(ds2.query(["mean"])["mean"].estimate, v1_mean)
+    finally:
+        ds2.close()
+
+
+# ---------------------------------------------------------------------------
+# v2 stores: sidecar layout + full-suite round-trip
+# ---------------------------------------------------------------------------
+
+def test_v2_store_sidecar_roundtrips_suites_bit_exact(tmp_path):
+    rng = np.random.default_rng(11)
+    blocks = rng.normal(size=(4, 64, 3)).astype(np.float32)
+    suites = summarize_blocks(blocks, kll_k=64, kmv_k=64)
+    schema = sketch_schema_descriptor(suites)
+    assert schema["version"] == SKETCH_SCHEMA_VERSION
+    assert set(schema["kinds"]) == {"moments", "kll", "distinct"}
+
+    root = str(tmp_path / "v2.rsp")
+    store = RSPStore(root)
+    from repro.core.types import RSPSpec
+
+    spec = RSPSpec(num_records=256, num_blocks=4, num_original_blocks=4,
+                   record_shape=(3,), dtype="float32")
+    store.write_partition(blocks, spec, summaries=suites, sketch_schema=schema)
+
+    # manifest stays light; the payload lives in the sidecar
+    with open(os.path.join(root, RSPStore.MANIFEST)) as f:
+        manifest = json.load(f)
+    assert "summaries" not in manifest
+    assert manifest["sketches_file"] == RSPStore.SKETCHES
+    assert manifest["sketch_schema"] == schema
+    assert os.path.isfile(os.path.join(root, RSPStore.SKETCHES))
+
+    reopened = RSPStore(root)
+    assert reopened.sketch_schema() == schema
+    got = load_summaries(reopened.summaries())
+    assert len(got) == len(suites)
+    for back, orig in zip(got, suites):
+        assert back.to_dict() == orig.to_dict()  # all kinds, bit-exact
+
+
+def test_v2_dataset_reopen_keeps_sketch_answers(tmp_path):
+    rng = np.random.default_rng(13)
+    data = rng.lognormal(0.2, 1.0, size=(8192, 2)).astype(np.float32)
+    ds = rsp.partition(data, blocks=16, seed=5)
+    out = str(tmp_path / "q.rsp")
+    ds.save(out)
+    want = ds.query(["p50", "count"], use_sketches=True)
+    ds2 = rsp.open(out)
+    try:
+        before = ds2.executor.stats()
+        got = ds2.query(["p50", "count"], use_sketches=True)
+        assert got.from_sketches
+        assert (ds2.executor.stats() - before).blocks_fetched == 0
+        np.testing.assert_array_equal(
+            got["p50"].estimate, want["p50"].estimate
+        )
+        assert float(got["count"].estimate) == data.shape[0]
+    finally:
+        ds2.close()
