@@ -52,6 +52,7 @@ SUITES = {}
 def _register_suites():
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks.kernel_bench import ALL_KERNELS
+    from benchmarks.distributed_bench import distributed_rows
     from benchmarks.engine_bench import engine_rows
     from benchmarks.ingest_bench import ingest_rows
     from benchmarks.obs_bench import obs_rows
@@ -60,6 +61,7 @@ def _register_suites():
     from benchmarks.sketch_bench import sketch_rows
 
     SUITES.update({
+        "distributed": [distributed_rows],
         "engine": [engine_rows],
         "ingest": [ingest_rows],
         "obs": [obs_rows],

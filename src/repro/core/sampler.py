@@ -10,6 +10,8 @@ checkpoint is three integers (see core.types.SamplerState).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -155,6 +157,20 @@ class SamplingPolicy:
     def load_state_dict(self, state: dict) -> None:
         raise NotImplementedError
 
+    def _fingerprint_payload(self) -> dict:
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        """Digest of the selection *distribution* (not the draw counter).
+
+        Two policies with equal fingerprints produce identical block-id
+        sequences from identical draw counters.  Distributed hosts compare
+        fingerprints before a query so a stale manifest / divergent summary
+        set fails loudly instead of silently skewing HT weights.
+        """
+        payload = json.dumps(self._fingerprint_payload(), sort_keys=True)
+        return hashlib.sha1(payload.encode()).hexdigest()
+
 
 class UniformPolicy(SamplingPolicy):
     """Definition-4 sampling: equal probability, without replacement within
@@ -179,6 +195,13 @@ class UniformPolicy(SamplingPolicy):
         self.sampler = BlockSampler.from_state_dict(
             self.sampler.num_blocks, state["sampler"]
         )
+
+    def _fingerprint_payload(self) -> dict:
+        return {
+            "kind": self.name,
+            "seed": int(self.sampler.state.seed),
+            "num_blocks": int(self.sampler.num_blocks),
+        }
 
 
 def sketch_dispersion(summaries: Sequence) -> np.ndarray:
@@ -252,6 +275,16 @@ class WeightedPolicy(SamplingPolicy):
     def load_state_dict(self, state: dict) -> None:
         self.seed = int(state["seed"])
         self._draws = int(state["draws"])
+
+    def _fingerprint_payload(self) -> dict:
+        # exact float64 bytes: the PPS distribution IS the policy
+        return {
+            "kind": self.name,
+            "seed": int(self.seed),
+            "probabilities": hashlib.sha1(
+                np.ascontiguousarray(self.probabilities).tobytes()
+            ).hexdigest(),
+        }
 
 
 class StratifiedPolicy(SamplingPolicy):
@@ -338,6 +371,15 @@ class StratifiedPolicy(SamplingPolicy):
     def load_state_dict(self, state: dict) -> None:
         self.seed = int(state["seed"])
         self._draws = int(state["draws"])
+
+    def _fingerprint_payload(self) -> dict:
+        return {
+            "kind": self.name,
+            "seed": int(self.seed),
+            "strata": {
+                str(h): [int(b) for b in ids] for h, ids in self.strata.items()
+            },
+        }
 
 
 class QueryAwarePolicy(WeightedPolicy):

@@ -1,11 +1,13 @@
 # NOTE: keep this init free of modules that import repro.models.api /
 # repro.configs (e.g. `elastic`) -- model modules import
 # repro.distributed.sharding, and a heavyweight package init here would
-# close an import cycle.  Import repro.distributed.elastic directly.
+# close an import cycle.  Import repro.distributed.elastic directly, and
+# the RSP-query layer (DistributedDataset) resolves lazily via __getattr__.
 from repro.distributed.sharding import (
     ShardingRules,
     activation_sharding,
     batch_shardings,
+    block_ownership,
     constrain,
     default_rules,
     optimizer_shardings,
@@ -21,6 +23,35 @@ from repro.distributed.compression import (
     quantize_int8,
     quantize_roundtrip,
 )
+from repro.distributed.mesh import (
+    CoordinatorTransport,
+    HostKilledError,
+    LocalTransport,
+    Transport,
+    TransportError,
+    init_from_env,
+    run_local_hosts,
+)
+from repro.distributed.ownership import (
+    BlockOwnership,
+    load_ownership,
+    save_ownership,
+)
 from repro.distributed.straggler import LeaseScheduler, simulate
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+__all__ = [k for k in dir() if not k.startswith("_")] + [
+    "DistributedDataset",
+    "DistributedQueryExecutor",
+]
+
+_LAZY = ("DistributedDataset", "DistributedQueryExecutor")
+
+
+def __getattr__(name: str):
+    # lazy: repro.distributed.rsp pulls in the full repro.rsp query stack,
+    # which model code importing this package must not pay for
+    if name in _LAZY:
+        from repro.distributed import rsp
+
+        return getattr(rsp, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,4 +1,5 @@
-"""Elastic re-sharding: restore any checkpoint onto any mesh.
+"""Elastic membership: restore checkpoints onto any mesh, re-deal RSP
+blocks on host churn.
 
 Checkpoints store plain host arrays; shardings are derived from the
 ParamSpec logical axes against the *target* mesh at restore time, so the
@@ -7,27 +8,83 @@ data/model split) as long as logical dimensions stay divisible (uneven dims
 fall back to GSPMD padding exactly like at train time).
 
 Node-failure recovery = restore onto the shrunken mesh + re-deal the failed
-hosts' RSP blocks (``core.sampler.HostAssignment.redistribute``); Theorem 1
-keeps the re-dealt block unions statistically valid.
+hosts' RSP blocks (:func:`redeal_departed`); a joining host triggers
+:func:`rebalance_join`.  Both are statistically free by Theorem 1: any
+union of RSP blocks in corpus proportion is again an RSP block, so moving
+*where* a block is computed never changes *what* the estimates see.  The
+resulting deal round-trips through the store's ``ownership.json`` sidecar
+(:func:`~repro.distributed.ownership.save_ownership`), so a restarted mesh
+re-opens exactly the deal it left.
+
+Model-state helpers import jax / the model stack lazily, so the RSP-side
+churn helpers stay importable in lightweight (query-only) processes.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
-import jax
-
-from repro.checkpoint import store as ckpt
-from repro.distributed.sharding import (
-    ShardingRules,
-    optimizer_shardings,
-    param_shardings,
+from repro.distributed.ownership import (
+    BlockOwnership,
+    load_ownership,
+    save_ownership,
 )
-from repro.models import api
-from repro.models.config import ModelConfig
 
 
-def state_shardings(cfg: ModelConfig, rules: ShardingRules) -> dict:
+# ---------------------------------------------------------------------------
+# RSP block churn (Theorem-1-valid re-deals)
+# ---------------------------------------------------------------------------
+
+def redeal_departed(
+    ownership: BlockOwnership, departed: Sequence[int], *, store=None
+) -> BlockOwnership:
+    """Deal departed hosts' blocks round-robin onto the survivors.
+
+    Deterministic given the same departed set (every survivor derives the
+    identical map without communicating); persisted to ``store`` when one
+    is given so a restarted mesh resumes the post-churn deal."""
+    new = ownership.redeal(departed)
+    if store is not None:
+        save_ownership(store, new)
+    return new
+
+
+def rebalance_join(
+    ownership: BlockOwnership, num_hosts: int, *, store=None
+) -> BlockOwnership:
+    """Fresh balanced deal over ``num_hosts`` (a joining host gets its
+    proportional share of blocks; Theorem 1 makes the re-deal free)."""
+    new = ownership.rebalance(num_hosts)
+    if store is not None:
+        save_ownership(store, new)
+    return new
+
+
+def open_or_deal(store, num_blocks: int, num_hosts: int, *, seed: int = 0) -> BlockOwnership:
+    """The store's persisted deal when one matches, else a fresh deal
+    (persisted).  A stored deal with a different block count or host set is
+    replaced -- the store is the source of truth only while it matches the
+    mesh it serves."""
+    stored = load_ownership(store)
+    if (
+        stored is not None
+        and stored.num_blocks == num_blocks
+        and stored.num_hosts == num_hosts
+    ):
+        return stored
+    fresh = BlockOwnership.deal(num_blocks, num_hosts, seed=seed)
+    save_ownership(store, fresh)
+    return fresh
+
+
+# ---------------------------------------------------------------------------
+# Model-state elasticity (lazy: jax + model stack)
+# ---------------------------------------------------------------------------
+
+def state_shardings(cfg, rules) -> dict:
+    from repro.distributed.sharding import optimizer_shardings, param_shardings
+    from repro.models import api
+
     specs = api.model_specs(cfg)
     return {
         "params": param_shardings(specs, rules),
@@ -37,6 +94,8 @@ def state_shardings(cfg: ModelConfig, rules: ShardingRules) -> dict:
 
 def reshard_state(state: Any, shardings: Any) -> Any:
     """device_put every leaf onto its target sharding (cross-mesh safe)."""
+    import jax
+
     return jax.tree.map(
         lambda leaf, sh: jax.device_put(leaf, sh),
         state,
@@ -48,12 +107,14 @@ def reshard_state(state: Any, shardings: Any) -> Any:
 def restore_for_mesh(
     root: str,
     step: int,
-    cfg: ModelConfig,
-    rules: ShardingRules,
+    cfg,
+    rules,
     *,
     like: Any,
 ) -> tuple[Any, dict]:
     """Elastic restore: checkpoint (any origin mesh) -> target-mesh state."""
+    from repro.checkpoint import store as ckpt
+
     sh = state_shardings(cfg, rules)
     # step is a replicated scalar
     sh_full = {"params": sh["params"], "opt": sh["opt"]}

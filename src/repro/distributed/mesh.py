@@ -1,0 +1,289 @@
+"""``repro.distributed.mesh`` -- the byte-level coordination plane for
+multi-host RSP.
+
+Distributed queries need exactly one communication primitive: *publish a
+small byte payload under a key, and let every host poll for keys it is
+waiting on*.  XLA's CPU backend cannot run cross-process computations (so
+``psum``-style collectives are unavailable on an emulated CPU mesh), but the
+``jax.distributed`` coordination service ships a perfectly good distributed
+key-value store -- this module wraps it behind a tiny :class:`Transport`
+protocol so the query layer never touches jax internals, and provides an
+in-process :class:`LocalTransport` (threads + a shared dict) that emulates
+an N-host mesh inside one test process, including fault injection.
+
+Two implementations:
+
+* :class:`CoordinatorTransport` -- rides the ``jax.distributed`` coordination
+  service KV store (``key_value_set`` / ``blocking_key_value_get`` /
+  ``key_value_dir_get``, payloads base64-coded: the ``*_bytes`` variants
+  segfault on present-key reads in some jaxlib builds, while the string
+  variants are the ones jax itself exercises).  Real multi-process meshes;
+  see :func:`init_from_env` for the ``RSP_COORDINATOR`` bootstrap used by
+  the test harness.
+* :class:`LocalTransport` -- ``LocalTransport.group(n)`` returns n transports
+  over one shared in-memory store.  ``kill_after_puts(k)`` arms deterministic
+  fault injection: the k-th subsequent publish raises
+  :class:`HostKilledError`, emulating a host dying mid-query (the straggler /
+  elastic tests and the fan-out benchmark run on this).
+"""
+
+from __future__ import annotations
+
+import base64
+import os
+import threading
+import time
+from typing import Callable, Protocol, runtime_checkable
+
+
+class TransportError(RuntimeError):
+    """A transport operation failed (connection lost, duplicate key, ...)."""
+
+
+class HostKilledError(TransportError):
+    """Raised by a :class:`LocalTransport` whose host was fault-injected dead."""
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Minimal mesh coordination surface: identity + a shared KV store."""
+
+    @property
+    def host_id(self) -> int: ...
+
+    @property
+    def num_hosts(self) -> int: ...
+
+    def put(self, key: str, value: bytes) -> None: ...
+
+    def get(self, key: str, timeout: float = 0.0) -> bytes | None: ...
+
+    def poll(self, prefix: str) -> dict[str, bytes]: ...
+
+
+# ---------------------------------------------------------------------------
+# In-process emulation
+# ---------------------------------------------------------------------------
+
+class _LocalStore:
+    """Shared dict + condition variable behind a LocalTransport group."""
+
+    def __init__(self):
+        self._kv: dict[str, bytes] = {}
+        self._cond = threading.Condition()
+
+    def put(self, key: str, value: bytes) -> None:
+        with self._cond:
+            self._kv[key] = bytes(value)
+            self._cond.notify_all()
+
+    def get(self, key: str, timeout: float) -> bytes | None:
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while True:
+                v = self._kv.get(key)
+                if v is not None:
+                    return v
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._cond.wait(remaining)
+
+    def poll(self, prefix: str) -> dict[str, bytes]:
+        with self._cond:
+            return {k: v for k, v in self._kv.items() if k.startswith(prefix)}
+
+
+class LocalTransport:
+    """One emulated host of an in-process mesh (see ``group``).
+
+    All hosts share one :class:`_LocalStore`; each host runs on its own
+    thread (``run_local_hosts``).  Fault injection: ``kill_after_puts(k)``
+    makes the k-th subsequent ``put`` (and every transport call after it)
+    raise :class:`HostKilledError` -- from the peers' point of view the host
+    simply stops publishing, exactly like a crashed process.
+    """
+
+    def __init__(self, store: _LocalStore, host_id: int, num_hosts: int):
+        self._store = store
+        self._host_id = int(host_id)
+        self._num_hosts = int(num_hosts)
+        self._kill_after: int | None = None
+        self._puts = 0
+        self._dead = False
+
+    @classmethod
+    def group(cls, num_hosts: int) -> list["LocalTransport"]:
+        """``num_hosts`` transports over one shared in-memory store."""
+        if num_hosts < 1:
+            raise ValueError("num_hosts must be >= 1")
+        store = _LocalStore()
+        return [cls(store, h, num_hosts) for h in range(num_hosts)]
+
+    @property
+    def host_id(self) -> int:
+        return self._host_id
+
+    @property
+    def num_hosts(self) -> int:
+        return self._num_hosts
+
+    def kill_after_puts(self, k: int) -> None:
+        """Arm fault injection: die on the k-th subsequent publish."""
+        self._kill_after = int(k)
+
+    def _check_alive(self) -> None:
+        if self._dead:
+            raise HostKilledError(f"host {self._host_id} was killed")
+
+    def put(self, key: str, value: bytes) -> None:
+        self._check_alive()
+        if self._kill_after is not None and self._puts >= self._kill_after:
+            self._dead = True
+            raise HostKilledError(
+                f"host {self._host_id} killed after {self._puts} publishes"
+            )
+        self._puts += 1
+        self._store.put(key, value)
+
+    def get(self, key: str, timeout: float = 0.0) -> bytes | None:
+        self._check_alive()
+        return self._store.get(key, timeout)
+
+    def poll(self, prefix: str) -> dict[str, bytes]:
+        self._check_alive()
+        return self._store.poll(prefix)
+
+
+def run_local_hosts(
+    transports: list[LocalTransport], fn: Callable[[LocalTransport], object]
+) -> list[object]:
+    """Run ``fn(transport)`` for every host on its own thread.
+
+    Returns one result per host, ``None`` for hosts that died via fault
+    injection (:class:`HostKilledError`).  Any *other* exception from a host
+    is re-raised in the caller after all threads join -- a broken host must
+    fail the test, not vanish into a thread.
+    """
+    results: list[object] = [None] * len(transports)
+    errors: list[BaseException] = []
+
+    def run(i: int, t: LocalTransport) -> None:
+        try:
+            results[i] = fn(t)
+        except HostKilledError:
+            pass  # injected death: the host's silence is the point
+        except BaseException as e:  # noqa: BLE001 -- surface to the caller
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=run, args=(i, t), name=f"rsp-host-{i}")
+        for i, t in enumerate(transports)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if errors:
+        raise errors[0]
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Real multi-process meshes (jax.distributed coordination service)
+# ---------------------------------------------------------------------------
+
+class CoordinatorTransport:
+    """KV transport over the ``jax.distributed`` coordination service.
+
+    Requires ``jax.distributed.initialize`` to have run (see
+    :func:`init_from_env`).  Cross-process XLA *computations* are not
+    available on the CPU backend, but the coordination client's KV store is
+    fully functional -- which is all the distributed query protocol needs.
+    """
+
+    def __init__(self, client=None, *, host_id: int | None = None,
+                 num_hosts: int | None = None):
+        if client is None:
+            from jax._src import distributed as jax_distributed
+
+            client = jax_distributed.global_state.client
+            if client is None:
+                raise TransportError(
+                    "jax.distributed is not initialized -- call"
+                    " repro.distributed.mesh.init_from_env() or"
+                    " jax.distributed.initialize() first"
+                )
+            if host_id is None:
+                host_id = jax_distributed.global_state.process_id
+            if num_hosts is None:
+                num_hosts = jax_distributed.global_state.num_processes
+        self._client = client
+        self._host_id = int(host_id if host_id is not None else 0)
+        self._num_hosts = int(num_hosts if num_hosts is not None else 1)
+
+    @property
+    def host_id(self) -> int:
+        return self._host_id
+
+    @property
+    def num_hosts(self) -> int:
+        return self._num_hosts
+
+    def put(self, key: str, value: bytes) -> None:
+        encoded = base64.b64encode(bytes(value)).decode("ascii")
+        try:
+            self._client.key_value_set(key, encoded)
+        except Exception as e:
+            # payloads are deterministic, so a duplicate publish (two hosts
+            # stealing the same straggler position) carries identical bytes:
+            # if the key exists, the store already holds our value
+            if self._client_get(key, 0.05) is not None:
+                return
+            raise TransportError(f"key_value_set({key!r}) failed: {e}") from e
+
+    def _client_get(self, key: str, timeout: float) -> bytes | None:
+        try:
+            encoded = self._client.blocking_key_value_get(
+                key, max(int(timeout * 1000), 1)
+            )
+        except Exception:  # NotFound / DeadlineExceeded surface as RuntimeError
+            return None
+        return base64.b64decode(encoded)
+
+    def get(self, key: str, timeout: float = 0.0) -> bytes | None:
+        return self._client_get(key, timeout)
+
+    def poll(self, prefix: str) -> dict[str, bytes]:
+        try:
+            items = self._client.key_value_dir_get(prefix)
+        except Exception:
+            return {}
+        pairs = items.items() if isinstance(items, dict) else items
+        return {str(k): base64.b64decode(v) for k, v in pairs}
+
+    def barrier(self, name: str, timeout: float = 60.0) -> None:
+        self._client.wait_at_barrier(name, max(int(timeout * 1000), 1))
+
+
+def init_from_env(env=None) -> CoordinatorTransport | None:
+    """Bootstrap a real ``jax.distributed`` mesh from harness env vars.
+
+    Reads ``RSP_COORDINATOR`` (``host:port``), ``RSP_NUM_PROCESSES``, and
+    ``RSP_PROCESS_ID`` -- the variables ``tests/distributed_harness.py``
+    exports into every spawned process.  Returns ``None`` when
+    ``RSP_COORDINATOR`` is unset (single-host run), else initializes
+    ``jax.distributed`` and returns the :class:`CoordinatorTransport`.
+    """
+    env = os.environ if env is None else env
+    addr = env.get("RSP_COORDINATOR")
+    if not addr:
+        return None
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=addr,
+        num_processes=int(env["RSP_NUM_PROCESSES"]),
+        process_id=int(env["RSP_PROCESS_ID"]),
+    )
+    return CoordinatorTransport()

@@ -290,3 +290,25 @@ def abstract_compute_params(specs: Any, rules: ShardingRules, dtype=None) -> Any
         return jax.ShapeDtypeStruct(s.shape, dt, sharding=rules.named(s.axes))
 
     return jax.tree.map(leaf, specs, is_leaf=is_spec)
+
+
+def block_ownership(num_blocks: int, hosts=None, *, seed: int = 0):
+    """Derive the RSP block -> host deal for a mesh.
+
+    ``hosts`` may be a ``jax.sharding.Mesh`` (host count = number of
+    distinct processes its devices span), an int, or ``None`` (=
+    ``jax.process_count()``).  The deal itself is the deterministic epoch
+    permutation of ``core.sampler.deal_blocks`` -- the same sharding
+    philosophy as the model rules above, applied to data blocks: the rule
+    derives placement from the mesh, placement never changes the statistics
+    (Theorem 1: any block union in corpus proportion is again an RSP
+    block)."""
+    from repro.distributed.ownership import BlockOwnership
+
+    if hosts is None:
+        num_hosts = jax.process_count()
+    elif isinstance(hosts, Mesh):
+        num_hosts = len({d.process_index for d in hosts.devices.flat})
+    else:
+        num_hosts = int(hosts)
+    return BlockOwnership.deal(num_blocks, num_hosts, seed=seed)

@@ -41,6 +41,38 @@ class BlockSketch:
     def sum(self) -> np.ndarray:
         return self.count * self.mean
 
+    def to_dict(self) -> dict:
+        """JSON-safe encoding, exact to the bit: Python's shortest-repr float
+        serialization round-trips every finite float64, and the per-array
+        dtype is carried so decoding restores identical arrays."""
+        def arr(a):
+            if a is None:
+                return None
+            a = np.asarray(a)
+            return {"dtype": str(a.dtype), "shape": list(a.shape),
+                    "data": a.ravel().tolist()}
+
+        return {
+            "count": float(self.count),
+            "mean": arr(self.mean), "m2": arr(self.m2),
+            "min": arr(self.min), "max": arr(self.max),
+            "hist": arr(self.hist), "lo": arr(self.lo), "hi": arr(self.hi),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BlockSketch":
+        def arr(e):
+            if e is None:
+                return None
+            return np.asarray(e["data"], dtype=np.dtype(e["dtype"])).reshape(e["shape"])
+
+        return cls(
+            count=float(d["count"]),
+            mean=arr(d["mean"]), m2=arr(d["m2"]),
+            min=arr(d["min"]), max=arr(d["max"]),
+            hist=arr(d.get("hist")), lo=arr(d.get("lo")), hi=arr(d.get("hi")),
+        )
+
 
 def merge_sketches(a: BlockSketch, b: BlockSketch) -> BlockSketch:
     """Chan-style parallel combine of two sketches (histograms add); the

@@ -546,6 +546,21 @@ class RSPDataset:
 
         return QueryExecutor(self, as_query(aggregates, **kwargs)).stream()
 
+    def distribute(self, transport, *, ownership=None, **kwargs):
+        """This dataset as one host of a mesh: a
+        :class:`~repro.distributed.DistributedDataset` whose queries fan
+        block work out over ``transport`` (a
+        :class:`~repro.distributed.mesh.Transport`), with this host reading
+        only its owned blocks.  ``ownership`` defaults to the deterministic
+        deal of ``num_blocks`` over ``transport.num_hosts`` seeded by the
+        partition seed; ``straggler_grace=`` / ``poll_interval=`` forward to
+        ``DistributedDataset``.  Requires materialized partition-time
+        sketches (open a store that carries them, or partition with
+        ``summaries=True``)."""
+        from repro.distributed.rsp import DistributedDataset
+
+        return DistributedDataset(self, transport, ownership=ownership, **kwargs)
+
     def serve(self, **kwargs):
         """A concurrent multi-tenant :class:`~repro.serve.QueryService` over
         this dataset: many simultaneous queries share this dataset's

@@ -218,6 +218,46 @@ class _AdapterFetcher:
         return self._load(block_id)
 
 
+class ScopedFetcher:
+    """A fetcher restricted to an allowed block set (per-host ownership).
+
+    A distributed host must only ever touch blocks it owns (plus blocks it
+    has legitimately stolen from a straggler) -- anything else means the
+    scheduler leaked work and the "each host streams only its local blocks"
+    invariant is broken.  ``ScopedFetcher`` turns that invariant into a hard
+    failure: fetching outside the allowed set raises ``PermissionError``.
+    ``allow`` widens the scope when leases are stolen; ``replace`` resets it
+    after an elastic re-deal.
+    """
+
+    def __init__(self, inner: BlockFetcher, allowed: Iterable[int]):
+        self._inner = inner
+        self._allowed = set(int(b) for b in allowed)
+
+    @property
+    def num_blocks(self) -> int:
+        return self._inner.num_blocks
+
+    @property
+    def allowed(self) -> frozenset[int]:
+        return frozenset(self._allowed)
+
+    def allow(self, block_ids: Iterable[int]) -> None:
+        """Widen the scope (stolen straggler leases)."""
+        self._allowed.update(int(b) for b in block_ids)
+
+    def replace(self, block_ids: Iterable[int]) -> None:
+        """Reset the scope (elastic re-deal changed this host's ownership)."""
+        self._allowed = set(int(b) for b in block_ids)
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        if int(block_id) not in self._allowed:
+            raise PermissionError(
+                f"block {block_id} is outside this host's owned/stolen scope"
+            )
+        return self._inner.fetch(block_id)
+
+
 def as_fetcher(source: Any, *, mode: str = "auto") -> BlockFetcher:
     """Adapt ``source`` into a :class:`BlockFetcher`.
 
@@ -225,7 +265,9 @@ def as_fetcher(source: Any, *, mode: str = "auto") -> BlockFetcher:
     (``mode="store"`` materializes, ``"mmap"`` memory-maps, ``"auto"`` ==
     ``"store"``), or any object with ``num_blocks`` and ``block``/``load``.
     """
-    if isinstance(source, (MemoryFetcher, StoreFetcher, MmapFetcher, _AdapterFetcher)):
+    if isinstance(
+        source, (MemoryFetcher, StoreFetcher, MmapFetcher, _AdapterFetcher, ScopedFetcher)
+    ):
         return source
     if isinstance(source, np.ndarray):
         return MemoryFetcher(source)

@@ -632,11 +632,15 @@ class _DistinctAgg:
         self.sketch = DistinctSketch()
 
     def update(self, sketches: Sequence[BlockSketch], weight: float | None) -> None:
-        pass  # fed raw rows via update_rows: distinct needs values, not moments
+        pass  # fed per-block KMV sketches via merge_block, not moments
 
-    def update_rows(self, rows: np.ndarray) -> None:
-        if rows.size:
-            self.sketch.update(rows)
+    def merge_block(self, block_sketch) -> None:
+        """Fold one block's KMV sketch.  k-min-of-union == union-of-k-mins,
+        so merging per-block sketches is *exactly* equal to feeding the raw
+        rows -- which is what lets distributed hosts ship sketches instead
+        of rows."""
+        if block_sketch is not None:
+            self.sketch = self.sketch.merge(block_sketch)
 
     def result(self) -> AggregateResult:
         try:
@@ -1042,6 +1046,63 @@ class QueryExecutor:
             "rows_total": n, "rows_selected": n,
         }
 
+    def _make_payload(
+        self, block, lo, hi, needs_hist, needs_rows, grouped, need_whole
+    ) -> dict:
+        """Everything the fold needs from one block, as mergeable state.
+
+        The payload is a pure function of ``(block bytes, query shape)`` --
+        no draw-order or host-local state -- which is what makes distributed
+        execution bit-identical to single-host: any host computing this
+        block's payload produces the same dict, so *where* it is computed is
+        irrelevant to the fold."""
+        payload = self._block_sketches(block, lo, hi, needs_hist, grouped, need_whole)
+        payload["distinct"] = (
+            self._distinct_sketch(block) if needs_rows else None
+        )
+        return payload
+
+    def _distinct_sketch(self, block):
+        """Per-block KMV sketch of the filtered/projected rows (k-min of a
+        union == union of k-mins, so folding these per-block sketches is
+        exactly the single-pass sketch of all surviving rows)."""
+        from repro.rsp.sketch import DistinctSketch
+
+        q = self.q
+        rows = np.asarray(block, dtype=np.float64)
+        rows = rows.reshape(rows.shape[0], -1)
+        if q.where:
+            xf = rows.astype(np.float32)
+            keep = np.ones(rows.shape[0], dtype=bool)
+            for p in q.where:
+                keep &= p.mask(xf)
+            rows = rows[keep]
+        if q.columns is not None:
+            cols = [c % rows.shape[1] for c in q.columns]
+            rows = rows[:, cols]
+        sk = DistinctSketch()
+        if rows.size:
+            sk.update(rows)
+        return sk
+
+    def _payload_source(
+        self, ids, lo, hi, *, needs_hist, needs_rows, grouped, need_whole
+    ) -> Iterator[tuple[int, dict]]:
+        """Yield ``(block_id, payload)`` in selection order.
+
+        This is the single seam between *selecting and computing* blocks and
+        *folding* them: the single-host source streams local blocks through
+        the executor; ``DistributedQueryExecutor`` overrides only this method
+        to gather peer-computed payloads, so both paths fold byte-identical
+        payloads through identical code."""
+        executor = self.ds.executor
+        for bid, block in executor.map_blocks(
+            None, ids, with_ids=True, counter=self.counter, trace=self.ctx
+        ):
+            yield bid, self._make_payload(
+                block, lo, hi, needs_hist, needs_rows, grouped, need_whole
+            )
+
     def stream(self) -> Iterator[QueryResult]:
         """One anytime :class:`QueryResult` per block read."""
         return self._stream(anytime=True)
@@ -1074,7 +1135,6 @@ class QueryExecutor:
                 yield res
                 return
 
-        executor = self.ds.executor
         # sketch probabilities (weighted/stratified) and the histogram grid
         # both come from ds.summaries, which on a sketch-less dataset reads
         # every block -- those passes belong in this query's honest I/O count
@@ -1118,77 +1178,76 @@ class QueryExecutor:
         filtered = bool(q.where)
         sel_rows = tot_rows = 0.0  # HT-weighted selectivity ratio estimator
         trace = ConvergenceTrace(confidence=q.confidence, target_rel_err=q.target_rel_err)
-        for bid, block in executor.map_blocks(
-            None, gen_ids(), with_ids=True, counter=self.counter, trace=self.ctx
-        ):
-            weight = None
-            if isinstance(self._pol, WeightedPolicy):
-                weight = float(self._pol.weights([bid])[0])
-            sk = self._block_sketches(block, lo, hi, needs_hist, grouped, need_whole)
-            if needs_rows:
-                rows = np.asarray(block, dtype=np.float64)
-                rows = rows.reshape(rows.shape[0], -1)
-                if q.where:
-                    xf = rows.astype(np.float32)
-                    keep = np.ones(rows.shape[0], dtype=bool)
-                    for p in q.where:
-                        keep &= p.mask(xf)
-                    rows = rows[keep]
-                if q.columns is not None:
-                    cols = [c % rows.shape[1] for c in q.columns]
-                    rows = rows[:, cols]
-                for state in states:
-                    if isinstance(state, _DistinctAgg):
-                        state.update_rows(rows)
-            scale = weight if weight is not None else float(K)
-            sel_rows += scale * sk["rows_selected"]
-            tot_rows += scale * sk["rows_total"]
-            for agg, state in zip(q.aggregates, states):
-                state.update(sk["per_class"] if agg.by_label else [sk["whole"]], weight)
-            b += 1
-            # materializing results is not free (quantile CIs bootstrap over
-            # all b histograms); when nothing can stop the scan early and the
-            # caller only wants the final answer, skip the intermediate ones
-            must_emit = (
-                anytime or q.explain or q.target_rel_err is not None or b == max_blocks
-            )
-            if not must_emit:
-                continue
-            results = tuple(s.result() for s in states)
-            errs = [r.rel_err for r in results if r.rel_err is not None]
-            converged = (
-                q.target_rel_err is not None
-                and b >= q.min_blocks
-                and bool(errs)
-                and max(errs) <= q.target_rel_err
-            )
-            trace.record(
-                ConvergenceStep(
-                    blocks_read=b,
-                    block_id=int(bid),
-                    max_rel_err=max(errs) if errs else math.inf,
-                    estimates={r.name: _scalar0(r.estimate) for r in results},
-                    half_widths={r.name: _half_width(r) for r in results},
-                    cum_fetch_s=self.counter.fetch_seconds(),
-                    elapsed_s=time.perf_counter() - self._t0,
+        source = self._payload_source(
+            gen_ids(), lo, hi, needs_hist=needs_hist, needs_rows=needs_rows,
+            grouped=grouped, need_whole=need_whole,
+        )
+        try:
+            for bid, sk in source:
+                weight = None
+                if isinstance(self._pol, WeightedPolicy):
+                    weight = float(self._pol.weights([bid])[0])
+                if needs_rows:
+                    for state in states:
+                        if isinstance(state, _DistinctAgg):
+                            state.merge_block(sk["distinct"])
+                scale = weight if weight is not None else float(K)
+                sel_rows += scale * sk["rows_selected"]
+                tot_rows += scale * sk["rows_total"]
+                for agg, state in zip(q.aggregates, states):
+                    state.update(
+                        sk["per_class"] if agg.by_label else [sk["whole"]], weight
+                    )
+                b += 1
+                # materializing results is not free (quantile CIs bootstrap
+                # over all b histograms); when nothing can stop the scan early
+                # and the caller only wants the final answer, skip the
+                # intermediate ones
+                must_emit = (
+                    anytime or q.explain or q.target_rel_err is not None
+                    or b == max_blocks
                 )
-            )
-            yield QueryResult(
-                aggregates=results,
-                blocks_read=b,
-                total_blocks=K,
-                confidence=q.confidence,
-                target_rel_err=q.target_rel_err,
-                converged=converged,
-                from_sketches=False,
-                executor_stats=self.counter.stats(),
-                selectivity=(
-                    sel_rows / max(tot_rows, 1.0) if filtered else None
-                ),
-                trace=trace,
-            )
-            if converged:
-                return
+                if not must_emit:
+                    continue
+                results = tuple(s.result() for s in states)
+                errs = [r.rel_err for r in results if r.rel_err is not None]
+                converged = (
+                    q.target_rel_err is not None
+                    and b >= q.min_blocks
+                    and bool(errs)
+                    and max(errs) <= q.target_rel_err
+                )
+                trace.record(
+                    ConvergenceStep(
+                        blocks_read=b,
+                        block_id=int(bid),
+                        max_rel_err=max(errs) if errs else math.inf,
+                        estimates={r.name: _scalar0(r.estimate) for r in results},
+                        half_widths={r.name: _half_width(r) for r in results},
+                        cum_fetch_s=self.counter.fetch_seconds(),
+                        elapsed_s=time.perf_counter() - self._t0,
+                    )
+                )
+                yield QueryResult(
+                    aggregates=results,
+                    blocks_read=b,
+                    total_blocks=K,
+                    confidence=q.confidence,
+                    target_rel_err=q.target_rel_err,
+                    converged=converged,
+                    from_sketches=False,
+                    executor_stats=self.counter.stats(),
+                    selectivity=(
+                        sel_rows / max(tot_rows, 1.0) if filtered else None
+                    ),
+                    trace=trace,
+                )
+                if converged:
+                    return
+        finally:
+            # GeneratorExit / convergence must reach the source's own finally
+            # (a distributed source publishes its stop marker there)
+            source.close()
 
     def run(self) -> QueryResult:
         result = None

@@ -1,0 +1,239 @@
+"""Reusable multi-process test harness for ``jax.distributed`` CPU meshes.
+
+The old pattern -- inline ``subprocess.run(capture_output=True)`` with an
+implicit PYTHONPATH -- had three silent-failure modes this harness fixes:
+
+* **stderr swallowed on timeout**: ``subprocess.run(timeout=...)`` raises
+  ``TimeoutExpired`` before the captured pipes are readable, so the reason a
+  hung test hung was lost.  Here every process writes stdout/stderr to temp
+  files that are read back whatever happens, and ``ProcResult`` carries
+  them into the assertion message.
+* **implicit PYTHONPATH**: the repo's ``src`` layout worked only when the
+  parent's environment happened to carry it.  The harness always exports an
+  explicit ``PYTHONPATH`` pointing at ``<repo>/src``.
+* **no port isolation**: concurrent test runs racing for a hard-coded
+  coordinator port deadlock ``jax.distributed.initialize``.  ``free_port``
+  binds port 0 per invocation, so every test gets its own coordinator.
+
+Usage::
+
+    from tests.distributed_harness import run_processes, assert_ok
+
+    results = run_processes(SOURCE, num_processes=4, timeout=120)
+    assert_ok(results, marker="MY_TEST_OK")
+
+The spawned source bootstraps its mesh with
+``repro.distributed.mesh.init_from_env()``, which reads the
+``RSP_COORDINATOR`` / ``RSP_NUM_PROCESSES`` / ``RSP_PROCESS_ID`` variables
+this harness exports.  ``kill_after`` SIGKILLs selected processes after a
+delay to exercise straggler/elastic paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@dataclasses.dataclass
+class ProcResult:
+    """Outcome of one spawned mesh process."""
+
+    process_id: int
+    returncode: int | None
+    stdout: str
+    stderr: str
+    timed_out: bool = False
+    killed: bool = False  # killed deliberately via kill_after
+
+    @property
+    def ok(self) -> bool:
+        return self.returncode == 0 and not self.timed_out
+
+    def describe(self) -> str:
+        status = (
+            "timed out" if self.timed_out
+            else "killed (injected)" if self.killed
+            else f"exit {self.returncode}"
+        )
+        return (
+            f"--- process {self.process_id}: {status} ---\n"
+            f"stdout:\n{self.stdout[-2000:]}\n"
+            f"stderr:\n{self.stderr[-4000:]}\n"
+        )
+
+
+def free_port() -> int:
+    """A free TCP port on localhost (bound momentarily, then released)."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _base_env(env: dict | None) -> dict:
+    out = dict(os.environ)
+    out.update(env or {})
+    out["PYTHONPATH"] = SRC + os.pathsep + out.get("PYTHONPATH", "")
+    out.setdefault("JAX_PLATFORMS", "cpu")
+    out.setdefault("REPRO_AUTOTUNE", "off")
+    return out
+
+
+def run_processes(
+    source: str,
+    *,
+    num_processes: int,
+    timeout: float = 300.0,
+    env: dict | None = None,
+    kill_after: dict[int, float] | None = None,
+) -> list[ProcResult]:
+    """Run ``source`` as ``num_processes`` coordinated CPU processes.
+
+    Each process sees ``RSP_COORDINATOR`` (a fresh ``127.0.0.1:<port>``),
+    ``RSP_NUM_PROCESSES``, and its ``RSP_PROCESS_ID`` -- exactly what
+    ``repro.distributed.mesh.init_from_env()`` consumes.  ``kill_after``
+    maps ``process_id -> seconds``: those processes are SIGKILLed after the
+    delay (a crashed-host fault injection).  All processes share one hard
+    deadline of ``timeout`` seconds; survivors past it are killed and
+    marked ``timed_out`` with their streams intact.
+    """
+    if num_processes < 1:
+        raise ValueError("num_processes must be >= 1")
+    kill_after = dict(kill_after or {})
+    coordinator = f"127.0.0.1:{free_port()}"
+
+    with tempfile.TemporaryDirectory(prefix="rsp-mesh-") as tmp:
+        script = os.path.join(tmp, "mesh_test.py")
+        with open(script, "w") as f:
+            f.write(source)
+
+        procs: list[subprocess.Popen] = []
+        outs, errs = [], []
+        for pid in range(num_processes):
+            penv = _base_env(env)
+            penv["RSP_COORDINATOR"] = coordinator
+            penv["RSP_NUM_PROCESSES"] = str(num_processes)
+            penv["RSP_PROCESS_ID"] = str(pid)
+            penv["RSP_TMPDIR"] = tmp
+            out = open(os.path.join(tmp, f"out.{pid}"), "w+")
+            err = open(os.path.join(tmp, f"err.{pid}"), "w+")
+            outs.append(out)
+            errs.append(err)
+            procs.append(
+                subprocess.Popen(
+                    [sys.executable, script],
+                    env=penv,
+                    stdout=out,
+                    stderr=err,
+                    cwd=tmp,
+                )
+            )
+
+        start = time.monotonic()
+        deadline = start + timeout
+        pending_kills = dict(kill_after)
+        killed: set[int] = set()
+        timed_out: set[int] = set()
+        try:
+            while True:
+                now = time.monotonic()
+                for pid, delay in list(pending_kills.items()):
+                    if now - start >= delay and procs[pid].poll() is None:
+                        procs[pid].send_signal(signal.SIGKILL)
+                        killed.add(pid)
+                        del pending_kills[pid]
+                alive = [p for p in procs if p.poll() is None]
+                if not alive:
+                    break
+                if now > deadline:
+                    for pid, p in enumerate(procs):
+                        if p.poll() is None:
+                            p.send_signal(signal.SIGKILL)
+                            timed_out.add(pid)
+                    for p in procs:
+                        p.wait()
+                    break
+                time.sleep(0.05)
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.send_signal(signal.SIGKILL)
+                    p.wait()
+
+        results = []
+        for pid, p in enumerate(procs):
+            outs[pid].flush()
+            errs[pid].flush()
+            outs[pid].seek(0)
+            errs[pid].seek(0)
+            results.append(
+                ProcResult(
+                    process_id=pid,
+                    returncode=p.returncode,
+                    stdout=outs[pid].read(),
+                    stderr=errs[pid].read(),
+                    timed_out=pid in timed_out,
+                    killed=pid in killed,
+                )
+            )
+            outs[pid].close()
+            errs[pid].close()
+        return results
+
+
+def run_forced_devices(
+    source: str, *, devices: int = 8, timeout: float = 300.0, env: dict | None = None
+) -> ProcResult:
+    """Run ``source`` in one subprocess with ``devices`` forced XLA host
+    devices (``--xla_force_host_platform_device_count``) -- the harness for
+    single-process multi-*device* tests (shard_map collectives)."""
+    penv = _base_env(env)
+    penv["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    with tempfile.TemporaryDirectory(prefix="rsp-xla-") as tmp:
+        script = os.path.join(tmp, "forced_dev_test.py")
+        with open(script, "w") as f:
+            f.write(source)
+        try:
+            proc = subprocess.run(
+                [sys.executable, script],
+                env=penv,
+                capture_output=True,
+                text=True,
+                timeout=timeout,
+                cwd=tmp,
+            )
+            return ProcResult(0, proc.returncode, proc.stdout, proc.stderr)
+        except subprocess.TimeoutExpired as e:
+            return ProcResult(
+                0,
+                None,
+                (e.stdout or b"").decode(errors="replace") if isinstance(e.stdout, bytes) else (e.stdout or ""),
+                (e.stderr or b"").decode(errors="replace") if isinstance(e.stderr, bytes) else (e.stderr or ""),
+                timed_out=True,
+            )
+
+
+def assert_ok(
+    results: list[ProcResult] | ProcResult, marker: str | None = None
+) -> None:
+    """Assert every non-injected-kill process exited 0 (and printed
+    ``marker``, when given), with full per-process streams on failure."""
+    if isinstance(results, ProcResult):
+        results = [results]
+    report = "\n".join(r.describe() for r in results)
+    for r in results:
+        if r.killed:
+            continue  # deliberately SIGKILLed hosts have no exit contract
+        assert r.ok, f"process {r.process_id} failed\n{report}"
+        if marker is not None:
+            assert marker in r.stdout, (
+                f"process {r.process_id} missing marker {marker!r}\n{report}"
+            )

@@ -1,10 +1,6 @@
 """Distribution substrate tests: sharding rules, ZeRO specs, gradient
 compression, elastic re-sharding, straggler scheduling.  Multi-device cases
-run in a subprocess with a forced host device count."""
-
-import os
-import subprocess
-import sys
+run through the harness with a forced host device count."""
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +8,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from distributed_harness import assert_ok, run_forced_devices
 from repro.distributed.compression import (
     compression_ratio,
     error_feedback_compress,
@@ -127,13 +124,29 @@ def test_straggler_balanced_hosts_no_pathology():
     assert dyn["makespan"] <= static["makespan"] * 1.26
 
 
+def test_straggler_host_failure_completes_every_block_once():
+    # kill the fastest host early: its leases (incl. the in-flight block)
+    # requeue and the survivors drain them -- nothing dropped, no duplicates
+    out = simulate(40, [4.0, 1.0, 1.0], fail_at={0: 2.0})
+    assert out["dead_hosts"] == [0]
+    assert out["completed"] == 40
+    done = [b for bs in out["per_host_blocks"].values() for b in bs]
+    assert sorted(done) == list(range(40))
+    healthy = simulate(40, [4.0, 1.0, 1.0])
+    assert out["makespan"] >= healthy["makespan"]  # losing a host has a cost
+
+
+def test_straggler_all_hosts_dead_reports_shortfall():
+    out = simulate(40, [1.0, 1.0], fail_at={0: 0.5, 1: 0.5})
+    assert out["dead_hosts"] == [0, 1]
+    assert out["completed"] < 40  # honest: blocks were lost, not hidden
+
+
 # ---------------------------------------------------------------------------
 # multi-device: compressed psum + elastic restore (subprocess, 8 devices)
 # ---------------------------------------------------------------------------
 
 MULTI_DEV_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -193,12 +206,7 @@ print("MULTIDEV_OK")
 
 @pytest.mark.slow
 def test_multi_device_substrate():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run(
-        [sys.executable, "-c", MULTI_DEV_SCRIPT], env=env, capture_output=True, text=True,
-        timeout=900,
+    assert_ok(
+        run_forced_devices(MULTI_DEV_SCRIPT, devices=8, timeout=900),
+        marker="MULTIDEV_OK",
     )
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    assert "MULTIDEV_OK" in proc.stdout

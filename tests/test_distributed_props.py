@@ -1,0 +1,80 @@
+"""Property tests for distributed RSP queries (guarded on hypothesis).
+
+Two invariants, explored over random corpora, ownership maps, and
+straggler kill schedules:
+
+* a distributed progressive query is bit-identical to the single-host
+  answer with the same seed (HT/Hájek weights, CIs, stopping point), no
+  matter how many hosts run it or which one dies mid-query;
+* the lease scheduler's event simulation never double-processes or drops
+  a block as long as one host survives.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.distributed import LocalTransport  # noqa: E402
+from repro.distributed.straggler import simulate  # noqa: E402
+
+from test_distributed_query import _distributed_sigs, _make_ds, _sig  # noqa: E402
+
+_DS_CACHE: dict = {}
+
+
+def _cached_ds(data_seed):
+    if data_seed not in _DS_CACHE:
+        _DS_CACHE[data_seed] = _make_ds(n=2048, blocks=8, seed=3, data_seed=data_seed)
+    return _DS_CACHE[data_seed]
+
+
+@settings(max_examples=8, deadline=None, suppress_health_check=list(HealthCheck))
+@given(
+    data_seed=st.integers(0, 3),
+    query_seed=st.integers(0, 1000),
+    num_hosts=st.integers(1, 4),
+    policy=st.sampled_from(["uniform", "weighted"]),
+    kill=st.one_of(st.none(), st.tuples(st.integers(0, 3), st.integers(0, 3))),
+)
+def test_property_distributed_equals_single_host(
+    data_seed, query_seed, num_hosts, policy, kill
+):
+    ds = _cached_ds(data_seed)
+    q = dict(aggregates=["mean"], target_rel_err=0.05, seed=query_seed,
+             policy=policy, where="c2 > 0.5", max_blocks=8)
+    ref = _sig(ds.query(**q))
+    transports = LocalTransport.group(num_hosts)
+    killed = None
+    if kill is not None and num_hosts > 1:
+        killed = kill[0] % num_hosts
+        transports[killed].kill_after_puts(kill[1])
+    results = _distributed_sigs(ds, transports, q)
+    for h, r in enumerate(results):
+        if h == killed:
+            continue  # may be None (died) -- only survivors have a contract
+        assert r is not None and r[0] == ref
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    num_blocks=st.integers(1, 48),
+    speeds=st.lists(st.floats(0.05, 8.0), min_size=1, max_size=6),
+    lease_window=st.integers(1, 4),
+    fails=st.dictionaries(st.integers(0, 5), st.floats(0.0, 20.0), max_size=5),
+)
+def test_property_simulate_never_drops_or_duplicates(
+    num_blocks, speeds, lease_window, fails
+):
+    fails = {h: t for h, t in fails.items() if h < len(speeds)}
+    if len(fails) == len(speeds):
+        fails.popitem()  # keep one survivor
+    out = simulate(num_blocks, speeds, lease_window=lease_window, fail_at=fails)
+    done = [b for bs in out["per_host_blocks"].values() for b in bs]
+    assert len(done) == len(set(done)), "a block was processed twice"
+    assert sorted(done) == list(range(num_blocks)), "a block was dropped"
+    assert out["completed"] == num_blocks
+    for h in out["dead_hosts"]:
+        assert h in fails

@@ -1,0 +1,232 @@
+"""Distributed RSP query tests over the in-process ``LocalTransport`` mesh.
+
+The contract under test: a distributed progressive query is *bit-identical*
+to the single-host answer with the same seed.  Every host derives the same
+block-selection sequence, per-block payloads are pure functions of (block
+bytes, query shape), and all hosts fold decoded payloads in canonical
+position order through the same streaming estimator -- so estimates, CI
+endpoints, blocks_read, and convergence all match exactly, regardless of
+which host computed which block, or whether a host died mid-query
+(Theorem 1: re-assigning exchangeable blocks is statistically free).
+"""
+
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.distributed import (
+    BlockOwnership,
+    LocalTransport,
+    load_ownership,
+    run_local_hosts,
+    save_ownership,
+)
+from repro.distributed.elastic import open_or_deal, rebalance_join, redeal_departed
+from repro.rsp.dataset import RSPDataset
+from repro.rsp.engine import ScopedFetcher, as_fetcher
+
+
+def _make_ds(n=4096, blocks=16, seed=3, data_seed=7):
+    rng = np.random.default_rng(data_seed)
+    data = rng.normal(size=(n, 4)).astype(np.float32)
+    data[:, 2] = rng.gamma(2.0, 1.0, size=n).astype(np.float32)
+    return RSPDataset.partition(data, blocks, seed=seed)
+
+
+def _sig(r):
+    """Canonical bit-exact signature of a QueryResult."""
+    return json.dumps(
+        {
+            "est": {a.name: np.asarray(a.estimate).ravel().tolist() for a in r.aggregates},
+            "lo": {
+                a.name: None if a.ci_lo is None else np.asarray(a.ci_lo).ravel().tolist()
+                for a in r.aggregates
+            },
+            "hi": {
+                a.name: None if a.ci_hi is None else np.asarray(a.ci_hi).ravel().tolist()
+                for a in r.aggregates
+            },
+            "blocks_read": r.blocks_read,
+            "converged": r.converged,
+            "selectivity": r.selectivity,
+        },
+        sort_keys=True,
+    )
+
+
+QUERY = dict(
+    aggregates=["mean", "p95"],
+    target_rel_err=0.04,
+    seed=11,
+    policy="weighted",
+    where="c2 > 0.5",
+    max_blocks=16,
+)
+
+
+def _distributed_sigs(ds, transports, query_kwargs, **dds_kwargs):
+    def run(t):
+        dds = ds.distribute(t, straggler_grace=2.0, poll_interval=0.01, **dds_kwargs)
+        res = dds.query(**query_kwargs)
+        return _sig(res), dds.ownership
+
+    return run_local_hosts(transports, run)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+def test_distributed_matches_single_host_bitwise():
+    ds = _make_ds()
+    ref = _sig(ds.query(**QUERY))
+    results = _distributed_sigs(ds, LocalTransport.group(3), QUERY)
+    assert len(results) == 3
+    for sig, _own in results:
+        assert sig == ref
+
+
+def test_early_convergence_stops_at_same_block_everywhere():
+    ds = _make_ds(n=8192, blocks=32)
+    q = dict(QUERY, aggregates=["mean"], target_rel_err=0.2, max_blocks=32,
+             columns=[2])
+    ref = ds.query(**q)
+    assert ref.converged and ref.blocks_read < 32  # must actually stop early
+    results = _distributed_sigs(ds, LocalTransport.group(4), q)
+    for sig, _own in results:
+        assert sig == _sig(ref)
+
+
+def test_uniform_policy_and_grouped_quantiles_match():
+    ds = _make_ds()
+    q = dict(aggregates=["mean", "p50"], policy="uniform", seed=5, max_blocks=16,
+             target_rel_err=0.01, where="c0 > 0.0")
+    ref = _sig(ds.query(**q))
+    for sig, _own in _distributed_sigs(ds, LocalTransport.group(2), q):
+        assert sig == ref
+
+
+# ---------------------------------------------------------------------------
+# straggler death mid-query
+# ---------------------------------------------------------------------------
+
+def test_killed_host_changes_no_estimate():
+    ds = _make_ds(n=8192, blocks=32)
+    q = dict(QUERY, max_blocks=32)
+    ref = _sig(ds.query(**q))
+    transports = LocalTransport.group(4)
+    transports[3].kill_after_puts(2)  # dies after publishing 2 payloads
+    results = _distributed_sigs(ds, transports, q)
+    survivors = [r for r in results if r is not None]
+    assert len(survivors) == 3  # host 3 died via HostKilledError
+    for sig, own in survivors:
+        assert sig == ref  # estimates, CIs, stopping point: all unchanged
+        assert sorted(own.hosts()) == [0, 1, 2]  # dead host re-dealt away
+        assert own.epoch == 1
+
+
+def test_killed_host_blocks_are_redealt_to_survivors():
+    ds = _make_ds()
+    transports = LocalTransport.group(2)
+    transports[1].kill_after_puts(0)  # dies before publishing anything
+    ref = _sig(ds.query(**QUERY))
+    results = _distributed_sigs(ds, transports, QUERY)
+    assert results[1] is None
+    sig, own = results[0]
+    assert sig == ref
+    assert sorted(own.blocks_of(0)) == list(range(ds.num_blocks))
+
+
+# ---------------------------------------------------------------------------
+# serve: QueryService over a DistributedDataset
+# ---------------------------------------------------------------------------
+
+def test_query_service_over_distributed_mesh():
+    ds = _make_ds()
+    ref = _sig(ds.query(**QUERY))
+
+    def run(t):
+        dds = ds.distribute(t, straggler_grace=2.0, poll_interval=0.01)
+        with dds.serve(workers=1) as svc:
+            # explicit seed: every host's service derives the same namespace
+            ticket = svc.submit(**QUERY)
+            return _sig(svc.result(ticket, timeout=60.0))
+
+    for sig in run_local_hosts(LocalTransport.group(2), run):
+        assert sig == ref
+
+
+# ---------------------------------------------------------------------------
+# scope enforcement
+# ---------------------------------------------------------------------------
+
+def test_scoped_fetcher_denies_unowned_blocks():
+    ds = _make_ds()
+    scoped = ScopedFetcher(as_fetcher(ds._make_fetcher()), [0, 1, 2])
+    assert scoped.fetch(1) is not None
+    with pytest.raises(PermissionError):
+        scoped.fetch(3)
+    scoped.allow([3])  # a stolen lease widens the scope
+    assert scoped.fetch(3) is not None
+    scoped.replace([5])  # a re-deal resets it
+    with pytest.raises(PermissionError):
+        scoped.fetch(0)
+    assert scoped.fetch(5) is not None
+
+
+def test_distributed_dataset_requires_summaries():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(1024, 2)).astype(np.float32)
+    ds = RSPDataset.partition(data, 4, summaries=False)
+    with pytest.raises(ValueError, match="summaries"):
+        ds.distribute(LocalTransport.group(1)[0])
+
+
+# ---------------------------------------------------------------------------
+# elastic churn: leave, join, persisted deals
+# ---------------------------------------------------------------------------
+
+def test_redeal_departed_covers_all_blocks():
+    own = BlockOwnership.deal(32, 4, seed=1)
+    new = redeal_departed(own, [2])
+    assert sorted(new.hosts()) == [0, 1, 3]
+    covered = sorted(b for h in new.hosts() for b in new.blocks_of(h))
+    assert covered == list(range(32))
+    assert new.epoch == own.epoch + 1
+
+
+def test_join_rebalance_roundtrips_through_store(tmp_path):
+    store = types.SimpleNamespace(root=str(tmp_path))
+    own = open_or_deal(store, 32, 2, seed=5)
+    assert load_ownership(store) == own
+    grown = rebalance_join(own, 3, store=store)
+    assert grown.num_hosts == 3
+    assert load_ownership(store) == grown
+    # matching reopen returns the persisted deal, mismatch deals fresh
+    assert open_or_deal(store, 32, 3) == grown
+    fresh = open_or_deal(store, 32, 4)
+    assert fresh.num_hosts == 4 and load_ownership(store) == fresh
+
+
+def test_ownership_save_load_roundtrip(tmp_path):
+    store = types.SimpleNamespace(root=str(tmp_path))
+    own = BlockOwnership.deal(16, 3, seed=9).redeal([1])
+    save_ownership(store, own)
+    assert load_ownership(store) == own
+
+
+def test_elastic_join_after_query(tmp_path):
+    ds = _make_ds()
+    t = LocalTransport.group(1)[0]
+    dds = ds.distribute(t)
+    assert sorted(dds.owned_blocks) == list(range(16))
+    own = dds.rebalance(3)  # two hosts joined
+    assert own.num_hosts == 3
+    assert sorted(dds.owned_blocks) == sorted(own.blocks_of(0))
+    store = types.SimpleNamespace(root=str(tmp_path))
+    save_ownership(store, own)
+    assert load_ownership(store) == own
+
+

@@ -1,18 +1,25 @@
-"""Distributed (shard_map + all_to_all) Algorithm-1 tests.
+"""Multi-host RSP tests on real ``jax.distributed`` CPU meshes.
 
-These must run with multiple XLA host devices; device count is locked at
-first jax init, so they execute in a subprocess with XLA_FLAGS set.
+Two harness shapes (``tests/distributed_harness.py``):
+
+* ``run_forced_devices`` -- one subprocess with forced XLA host devices,
+  for shard_map collectives (the Algorithm-1 all_to_all partition);
+* ``run_processes`` -- N coordinated OS processes around a fresh
+  coordination-service port, for the distributed query protocol.  Every
+  process partitions the same seed-deterministic corpus, so each one can
+  check its mesh answer bit-for-bit against the single-host reference it
+  computes locally.
 """
-
-import os
-import subprocess
-import sys
 
 import pytest
 
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from distributed_harness import assert_ok, run_forced_devices, run_processes
+
+# ---------------------------------------------------------------------------
+# shard_map + all_to_all Algorithm-1 partition (multi-device, one process)
+# ---------------------------------------------------------------------------
+
+PARTITION_SOURCE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import distributed_rsp_partition, is_partition, RSPSpec, two_stage_partition_np
 from repro.core.similarity import max_label_divergence
@@ -47,11 +54,114 @@ print("DISTRIBUTED_RSP_OK")
 
 @pytest.mark.slow
 def test_distributed_rsp_partition_8dev():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run(
-        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True, timeout=600
+    assert_ok(
+        run_forced_devices(PARTITION_SOURCE, devices=8, timeout=600),
+        marker="DISTRIBUTED_RSP_OK",
     )
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    assert "DISTRIBUTED_RSP_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# distributed query protocol (N real processes, coordination-service KV)
+# ---------------------------------------------------------------------------
+
+MESH_QUERY_SOURCE = r"""
+import json
+import numpy as np
+from repro.distributed.mesh import init_from_env
+from repro.rsp.dataset import RSPDataset
+
+t = init_from_env()
+rng = np.random.default_rng(7)
+data = rng.normal(size=(32768, 4)).astype(np.float32)
+data[:, 2] = rng.gamma(2.0, 1.0, size=32768).astype(np.float32)
+ds = RSPDataset.partition(data, 32, seed=3)
+
+kwargs = dict(
+    aggregates=["mean", "p95"], target_rel_err=0.04, seed=11,
+    policy="weighted", where="c2 > 0.5", max_blocks=32,
+)
+ref = ds.query(**kwargs)
+
+dds = ds.distribute(t, straggler_grace=30.0, poll_interval=0.05)
+res = dds.query(**kwargs)
+
+def sig(r):
+    return json.dumps({
+        "est": {a.name: np.asarray(a.estimate).ravel().tolist() for a in r.aggregates},
+        "lo": {a.name: None if a.ci_lo is None else np.asarray(a.ci_lo).ravel().tolist() for a in r.aggregates},
+        "hi": {a.name: None if a.ci_hi is None else np.asarray(a.ci_hi).ravel().tolist() for a in r.aggregates},
+        "blocks_read": r.blocks_read,
+        "converged": r.converged,
+    }, sort_keys=True)
+
+assert sig(ref) == sig(res), "distributed != single-host:\n%s\n%s" % (sig(ref), sig(res))
+assert len(dds.owned_blocks) > 0  # every host holds part of the deal
+print("MESH_QUERY_OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("num_processes", [2, 4])
+def test_mesh_query_bit_identical(num_processes):
+    results = run_processes(MESH_QUERY_SOURCE, num_processes=num_processes, timeout=300)
+    assert_ok(results, marker="MESH_QUERY_OK")
+
+
+# The last process connects to the mesh, then hangs without computing a
+# single payload; the harness SIGKILLs it mid-query.  Survivors must hit the
+# straggler grace deadline, steal its leases via the deterministic redeal,
+# and still produce the bit-identical single-host answer.
+DEAD_HOST_SOURCE = r"""
+import json, os, time
+import numpy as np
+from repro.distributed.mesh import init_from_env
+from repro.rsp.dataset import RSPDataset
+
+t = init_from_env()
+victim = t.host_id == t.num_hosts - 1
+
+rng = np.random.default_rng(7)
+data = rng.normal(size=(32768, 4)).astype(np.float32)
+data[:, 2] = rng.gamma(2.0, 1.0, size=32768).astype(np.float32)
+ds = RSPDataset.partition(data, 32, seed=3)
+
+if victim:
+    time.sleep(600)  # never participates; SIGKILLed by the harness
+
+kwargs = dict(
+    aggregates=["mean", "p95"], target_rel_err=0.04, seed=11,
+    policy="weighted", where="c2 > 0.5", max_blocks=32,
+)
+ref = ds.query(**kwargs)
+dds = ds.distribute(t, straggler_grace=3.0, poll_interval=0.05)
+res = dds.query(**kwargs)
+
+def sig(r):
+    return json.dumps({
+        "est": {a.name: np.asarray(a.estimate).ravel().tolist() for a in r.aggregates},
+        "blocks_read": r.blocks_read, "converged": r.converged,
+    }, sort_keys=True)
+
+assert sig(ref) == sig(res), "survivor diverged:\n%s\n%s" % (sig(ref), sig(res))
+assert sorted(dds.ownership.hosts()) == list(range(t.num_hosts - 1)), dds.ownership.hosts()
+
+# survivors sync through the KV store before exiting: the coordinator
+# (process 0) leaving early would tear the service down under its peer
+t.put("done/%d" % t.host_id, b"1")
+for h in range(t.num_hosts - 1):
+    assert t.get("done/%d" % h, timeout=60.0) is not None
+print("DEAD_HOST_OK", flush=True)
+# skip jax.distributed atexit teardown: the coordinator would wait for the
+# killed process's orderly shutdown that never comes
+os._exit(0)
+"""
+
+
+@pytest.mark.slow
+def test_mesh_query_survives_killed_host():
+    results = run_processes(
+        DEAD_HOST_SOURCE, num_processes=3, timeout=300, kill_after={2: 8.0}
+    )
+    # the victim has no exit contract at all: it is either SIGKILLed by the
+    # harness or aborts itself when the finished coordinator tears down
+    assert_ok([r for r in results if r.process_id != 2], marker="DEAD_HOST_OK")
